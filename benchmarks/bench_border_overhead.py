@@ -1,0 +1,44 @@
+"""Paper Tables VIII/IX analogue: border-management overhead.
+
+FPGA: extra registers/LUTs/muxes per policy. TPU: extra HLO flops/bytes
+and wall time of the lean index-remap vs the no-policy (neglect) filter —
+the claim to reproduce is that overlapped priming/flushing (here: remap
+fused into the stream) costs little and never stalls (no extra pass)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import hlo_costs, row, time_call
+from repro.core import filters
+from repro.core.borders import SAME_SIZE_POLICIES, BorderSpec
+from repro.core.filter2d import filter2d
+
+H, W = 480, 640
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((H, W)).astype(np.float32))
+    k = jnp.asarray(filters.gaussian(7))
+    xa = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    ka = jax.ShapeDtypeStruct(k.shape, k.dtype)
+
+    base_fn = lambda a, b: filter2d(a, b, border=BorderSpec("neglect"))
+    base_us = time_call(base_fn, x, k)
+    base_costs = hlo_costs(base_fn, xa, ka)
+    out = [row("table8/neglect", base_us,
+               f"hlo_flops={base_costs['flops']:.3e};"
+               f"hlo_bytes={base_costs['bytes']:.3e};overhead=1.00")]
+    for pol in SAME_SIZE_POLICIES:
+        fn = lambda a, b, p=pol: filter2d(a, b, border=BorderSpec(p))
+        us = time_call(fn, x, k)
+        costs = hlo_costs(fn, xa, ka)
+        out.append(row(
+            f"table8/{pol}", us,
+            f"hlo_flops={costs['flops']:.3e};"
+            f"hlo_bytes={costs['bytes']:.3e};"
+            f"overhead={us / max(base_us, 1e-9):.2f};"
+            f"bytes_overhead={costs['bytes'] / base_costs['bytes']:.3f}"))
+    return out

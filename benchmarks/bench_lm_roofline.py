@@ -1,0 +1,43 @@
+"""LM-framework benches: per-arch analytic roofline summary (reads the
+dry-run/roofline artifacts when present; falls back to analytic bounds).
+
+One line per (arch × shape) baseline — the §Roofline table's CSV twin."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import HBM_BW, PEAK_FLOPS, row
+from repro.configs.base import (ARCH_IDS, get_model_config, resolve,
+                                supported_shapes)
+
+ROOFLINE_JSON = os.path.join("experiments", "roofline.json")
+
+
+def run():
+    out = []
+    if os.path.exists(ROOFLINE_JSON):
+        with open(ROOFLINE_JSON) as f:
+            reports = json.load(f)
+        for r in reports:
+            out.append(row(
+                f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                f"compute_ms={r['compute_s']*1e3:.3f};"
+                f"memory_ms={r['memory_s']*1e3:.3f};"
+                f"collective_ms={r['collective_s']*1e3:.3f};"
+                f"dominant={r['dominant']};"
+                f"useful={r['useful_ratio']:.3f};"
+                f"roofline_frac={r['roofline_fraction']:.3f}"))
+        return out
+    # fallback: analytic model flops only
+    from repro.launch.roofline import model_flops
+    from repro.launch.dryrun import shape_kind
+    for arch in ARCH_IDS:
+        mc = get_model_config(arch)
+        for shape in supported_shapes(mc):
+            rc = resolve(arch, shape)
+            mf = model_flops(rc, shape_kind(shape))
+            out.append(row(f"roofline/{arch}/{shape}", 0.0,
+                           f"model_flops={mf:.3e};"
+                           f"source=analytic_fallback"))
+    return out

@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: timing + compiled-cost inspection."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import numpy as np
+
+# TPU v5e targets (per brief) — used for analytic pixel-rate derivations
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10
+              ) -> float:
+    """Median wall time per call in microseconds (CPU this container)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def hlo_costs(fn: Callable, *abstract_args) -> Dict[str, float]:
+    c = jax.jit(fn).lower(*abstract_args).compile()
+    ca = c.cost_analysis()
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table (+ LM roofline summary).
+
+  PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_border_overhead, bench_filter_forms,
+                            bench_hls_comparison, bench_lm_roofline,
+                            bench_throughput)
+    modules = [
+        ("filter_forms", bench_filter_forms),
+        ("border_overhead", bench_border_overhead),
+        ("hls_comparison", bench_hls_comparison),
+        ("throughput", bench_throughput),
+        ("lm_roofline", bench_lm_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for line in mod.run():
+                print(line)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},-1,ERROR={type(e).__name__}:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

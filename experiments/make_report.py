@@ -1,0 +1,57 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+artifacts under experiments/ (run after dryrun --all and roofline --all).
+
+  PYTHONPATH=src python experiments/make_report.py > experiments/tables.md
+"""
+import json
+import glob
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def dryrun_table():
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        mem = r["memory"]
+        args_g = (mem["argument_bytes"] or 0) / 2 ** 30
+        tmp_g = (mem["temp_bytes"] or 0) / 2 ** 30
+        rows.append((r["arch"], r["shape"], r["mesh"],
+                     f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                     f"{r['kind']} | {r['compile_s']:.0f}s | "
+                     f"{args_g:.2f} | {tmp_g:.2f} | "
+                     f"{r['flops_per_device']:.2e} | "
+                     f"{r['bytes_per_device']:.2e} |"))
+    print("| arch | shape | mesh | kind | compile | args GiB/dev | "
+          "temp GiB/dev | HLO flops/dev¹ | HLO bytes/dev¹ |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for _, _, _, line in sorted(rows):
+        print(line)
+    print(f"\n{len(rows)} cells compiled. "
+          "¹ scan bodies counted once (see §Roofline for corrected totals).")
+
+
+def roofline_table():
+    fn = os.path.join(HERE, "roofline.json")
+    if not os.path.exists(fn):
+        print("(roofline.json not present yet)")
+        return
+    with open(fn) as f:
+        reports = json.load(f)
+    print("| arch | shape | compute s | memory s | collective s | bound | "
+          "MODEL_FLOPS | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(reports, key=lambda r: (r["arch"], r["shape"])):
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+              f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+              f"{r['dominant']} | {r['model_flops']:.2e} | "
+              f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.1%} |")
+
+
+if __name__ == "__main__":
+    print("## Dry-run table\n")
+    dryrun_table()
+    print("\n## Roofline table\n")
+    roofline_table()

@@ -1,0 +1,2 @@
+"""repro: high-throughput 2D spatial filters on TPU (Al-Dujaili & Fahmy,
+2017) + the multi-pod JAX training/serving framework built around them."""

@@ -1,0 +1,153 @@
+"""Sharded checkpointing with atomic publish, async save, and resharding
+restore (elastic restart at a different device count / mesh).
+
+Layout:  <dir>/step_<N>/
+           manifest.json        {path -> {shape, dtype}} + metadata
+           <flat-key>.npy       one file per leaf (host-gathered)
+         <dir>/step_<N>.tmp...  staging dir, renamed atomically on publish
+
+Leaves are stored as LOGICAL (unsharded) arrays; ``restore_checkpoint``
+device_puts them under whatever sharding the *new* mesh prescribes — this
+is what makes restarts elastic: the checkpoint has no memory of the mesh
+that wrote it. (Multi-host note: with jax.distributed each host gathers
+addressable shards only; this container is single-process, where a full
+gather is exact.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "::"
+
+
+def _flatten(tree, prefix=()):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, prefix + (str(k),)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, prefix + (f"#{i}",)))
+    elif tree is None:
+        pass
+    else:
+        out[SEP.join(prefix)] = tree
+    return out
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray], prefix=()):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, prefix + (str(k),))
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        seq = [_unflatten_into(v, flat, prefix + (f"#{i}",))
+               for i, v in enumerate(template)]
+        return type(template)(seq) if not hasattr(template, "_fields") \
+            else type(template)(*seq)
+    if template is None:
+        return None
+    return flat[SEP.join(prefix)]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *,
+                    metadata: Optional[Dict] = None) -> str:
+    """Write a checkpoint atomically; returns the published path."""
+    flat = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}, "metadata": metadata or {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":          # numpy can't round-trip bf16
+            arr = arr.astype(np.float32)  # exact widening
+        fn = key.replace("/", "_") + ".npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"][key] = {"file": fn, "shape": list(arr.shape),
+                                   "dtype": dtype}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)            # atomic publish
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template, *, step: Optional[int] = None,
+                       shardings=None) -> Tuple[Any, int]:
+    """Restore into the structure of ``template``; reshard onto
+    ``shardings`` (a matching tree of NamedSharding or None)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for key, info in manifest["leaves"].items():
+        arr = np.load(os.path.join(path, info["file"]))
+        if info["dtype"] == "bfloat16":
+            arr = jnp.asarray(arr, jnp.bfloat16)
+        flat[key] = arr
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        flat_t, tdef = jax.tree.flatten(tree)
+        flat_s = jax.tree.leaves(
+            shardings, is_leaf=lambda x: x is None or hasattr(x, "spec"))
+        put = [jax.device_put(t, s) if s is not None else jnp.asarray(t)
+               for t, s in zip(flat_t, flat_s)]
+        tree = jax.tree.unflatten(tdef, put)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree, step
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with at-most-one in flight.
+
+    ``save`` snapshots to host memory synchronously (cheap vs HBM write
+    amplification) and publishes on the worker thread, so the train loop
+    never blocks on the filesystem. ``wait()`` drains (called before exit
+    and by the preemption handler)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save(self, step: int, tree, metadata=None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            save_checkpoint(self.ckpt_dir, step, host_tree,
+                            metadata=metadata)
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

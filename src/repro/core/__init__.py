@@ -1,0 +1,14 @@
+"""The paper's contribution: high-throughput 2D spatial filtering, TPU-native.
+
+Submodules:
+  borders      — border policies as lean index remaps (paper §III)
+  filters      — runtime coefficient file + preset bank (paper §I/§II)
+  filter2d     — direct/transposed/tree/compress forms (paper §II)
+  streaming    — row-strip streaming executor with carried row buffer
+  distributed  — shard_map halo exchange (the row buffer, distributed)
+"""
+from repro.core.borders import BorderSpec, POLICIES, SAME_SIZE_POLICIES
+from repro.core.filter2d import (FORMS, filter2d, filter2d_xla, filter_bank,
+                                 macs_per_pixel, reduction_depth)
+from repro.core.filters import CoefficientFile, default_bank, preset
+from repro.core.streaming import filter2d_streaming, strip_height_for_vmem

@@ -1,0 +1,77 @@
+"""Distributed 2D filtering: the row buffer, distributed (shard_map + ppermute).
+
+For frames too tall for one device (or for throughput scaling), the frame is
+row-sharded over a mesh axis. Each shard needs the r = (w−1)/2 boundary rows
+of its neighbours — the *distributed* analogue of the paper's row buffer.
+We exchange exactly those rows with two `jax.lax.ppermute`s (up and down),
+then run the local filter with border remapping applied ONLY at the true
+frame edges (first/last shard). No frame-sized gather, no padded HBM copy:
+wire bytes = 2·r·W·C·dtype per shard boundary, independent of H.
+
+This is the paper's lean-border principle at cluster scale: border handling
+must not disturb the (sharded) stream.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.borders import BorderSpec, gather_rows
+from repro.core.filter2d import _FORM_FNS, _as_nhwc, _un_nhwc
+
+
+def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
+                     axis: str = "data", form: str = "direct",
+                     border_policy: str = "mirror") -> jax.Array:
+    """Row-shard ``frame`` over ``mesh[axis]`` and filter with halo exchange.
+
+    frame: [B,H,W,C] (H divisible by the axis size). Returns same shape.
+    """
+    if border_policy in ("neglect", "wrap"):
+        raise ValueError(f"sharded path does not support {border_policy!r}")
+    spec = BorderSpec(border_policy)
+    x, add_b, add_c = _as_nhwc(frame)
+    B, H, W, C = x.shape
+    w = coeffs.shape[-1]
+    r = (w - 1) // 2
+    n_shards = mesh.shape[axis]
+    assert H % n_shards == 0 and H // n_shards >= r, (H, n_shards, r)
+    if n_shards == 1:
+        from repro.core.filter2d import filter2d
+        return filter2d(frame, coeffs, form=form, border=spec)
+
+    in_specs = (P(None, axis, None, None), P())
+    out_specs = P(None, axis, None, None)
+
+    def local(xs: jax.Array, k: jax.Array) -> jax.Array:
+        Hs = xs.shape[1]
+        idx = jax.lax.axis_index(axis)
+        # halo exchange: send my top r rows up-neighbour-ward, bottom r down
+        fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+        bwd = [(i, (i - 1) % n_shards) for i in range(n_shards)]
+        top_from_above = jax.lax.ppermute(xs[:, Hs - r:], axis, fwd)
+        bot_from_below = jax.lax.ppermute(xs[:, :r], axis, bwd)
+        ext = jnp.concatenate([top_from_above, xs, bot_from_below], axis=1)
+        # true frame edges: remap locally (halo rows from the wrap-neighbour
+        # are garbage there and are overwritten by the remap)
+        first_src = jnp.concatenate([xs, bot_from_below], axis=1)
+        hi_first = gather_rows(first_src, jnp.arange(-r, Hs + r), spec, axis=1)
+        ext = jnp.where(idx == 0, hi_first, ext)
+        last_src = jnp.concatenate([top_from_above, xs], axis=1)
+        hi_last = gather_rows(last_src, jnp.arange(0, Hs + 2 * r), spec,
+                              axis=1)
+        ext = jnp.where(idx == n_shards - 1, hi_last, ext)
+        # column halo: plain index remap, local
+        wi = jnp.arange(-r, W + r)
+        ext = gather_rows(ext, wi, spec, axis=2)
+        return _FORM_FNS[form](ext, k, Hs, W)
+
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    y = fn(x, coeffs)
+    return _un_nhwc(y, add_b, add_c)

@@ -1,0 +1,283 @@
+"""2D spatial filter forms — the paper's §II, TPU-native (pure-jnp layer).
+
+The paper maps a general `w×w` runtime-coefficient filter onto DSP48E1
+blocks in two *forms* and three *adder-tree layouts*. On TPU the analogous
+design space is *how the w² multiply-reduce is scheduled onto the MXU/VPU*:
+
+  ``direct``      im2row patch matrix [P, w²] × coeff vector/matrix on the
+                  MXU. The MXU's internal systolic reduction tree plays the
+                  role of the paper's **DSP layout** adder tree (adds in
+                  silicon, highest throughput).
+  ``transposed``  shift-and-accumulate: w² shifted frame×scalar MACs on the
+                  VPU, running accumulator — the paper's transposed form
+                  (MAC chains, no tree, no patch materialisation).
+  ``tree``        like transposed but the w² products are reduced pairwise
+                  (log2 depth) — the paper's **LOG layout** (fabric adders).
+  ``compress``    products reduced in groups of 6 then summed — the paper's
+                  **DSPCOMP layout** (6:3 compressors + DSP adders).
+
+All forms are numerically the same filter (tests assert allclose across
+forms and against numpy); they differ in the *structure* XLA/Mosaic sees,
+which is the paper's point: structure determines throughput.
+
+Layout convention: frames are NHWC ``[B, H, W, C]`` (C=1 for mono). The
+coefficient operand is runtime data (a traced array), never baked into the
+graph — one compiled executable serves every filter (paper §I).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.borders import BorderSpec, extend, out_shape
+
+FORMS = ("direct", "transposed", "tree", "compress")
+
+
+def _as_nhwc(frame: jax.Array) -> Tuple[jax.Array, bool, bool]:
+    """Accept [H,W], [H,W,C] or [B,H,W,C]; return NHWC + flags to undo."""
+    add_c = frame.ndim == 2
+    if add_c:
+        frame = frame[..., None]
+    add_b = frame.ndim == 3
+    if add_b:
+        frame = frame[None]
+    return frame, add_b, add_c
+
+
+def _un_nhwc(y: jax.Array, add_b: bool, add_c: bool) -> jax.Array:
+    if add_b:
+        y = y[0]
+    if add_c:
+        y = y[..., 0]
+    return y
+
+
+def _shifted(xp: jax.Array, i: int, j: int, H: int, W: int) -> jax.Array:
+    """Window-tap view: xp is the (H+w-1, W+w-1)-extended frame."""
+    return jax.lax.dynamic_slice_in_dim(
+        jax.lax.dynamic_slice_in_dim(xp, i, H, axis=1), j, W, axis=2)
+
+
+def _taps(xp: jax.Array, coeffs: jax.Array, H: int, W: int):
+    """All w² (shifted-frame, scalar-coeff) product terms, in raster order."""
+    w = coeffs.shape[-1]
+    terms = []
+    for i in range(w):
+        for j in range(w):
+            terms.append((_shifted(xp, i, j, H, W), coeffs[i, j]))
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# Forms
+# ---------------------------------------------------------------------------
+
+
+def _direct(xp: jax.Array, coeffs: jax.Array, H: int, W: int) -> jax.Array:
+    """im2row → matmul. The patch matrix is built per output pixel row-window
+    and contracted on the MXU; its internal reduction tree does the adds."""
+    w = coeffs.shape[-1]
+    B, _, _, C = xp.shape
+    # Gather w² shifted planes then contract: [B,H,W,C,w²] @ [w²]
+    planes = jnp.stack(
+        [_shifted(xp, i, j, H, W) for i in range(w) for j in range(w)],
+        axis=-1)  # [B,H,W,C,w2]
+    return jnp.einsum("bhwck,k->bhwc", planes,
+                      coeffs.reshape(-1).astype(xp.dtype))
+
+
+def _transposed(xp: jax.Array, coeffs: jax.Array, H: int, W: int) -> jax.Array:
+    """Running-accumulator MAC chain over the w² taps (no patch tensor)."""
+    terms = _taps(xp, coeffs.astype(xp.dtype), H, W)
+    acc = terms[0][0] * terms[0][1]
+    for plane, c in terms[1:]:
+        acc = acc + plane * c
+    return acc
+
+
+def _tree(xp: jax.Array, coeffs: jax.Array, H: int, W: int) -> jax.Array:
+    """Pairwise (log2-depth) reduction of the w² products — LOG layout."""
+    prods = [pl * c for pl, c in _taps(xp, coeffs.astype(xp.dtype), H, W)]
+    while len(prods) > 1:
+        nxt = [prods[i] + prods[i + 1] for i in range(0, len(prods) - 1, 2)]
+        if len(prods) % 2:
+            nxt.append(prods[-1])
+        prods = nxt
+    return prods[0]
+
+
+def _compress(xp: jax.Array, coeffs: jax.Array, H: int, W: int,
+              group: int = 6) -> jax.Array:
+    """Group-of-6 partial sums, then a final chain — DSPCOMP layout."""
+    prods = [pl * c for pl, c in _taps(xp, coeffs.astype(xp.dtype), H, W)]
+    partials = []
+    for i in range(0, len(prods), group):
+        g = prods[i:i + group]
+        s = g[0]
+        for t in g[1:]:
+            s = s + t
+        partials.append(s)
+    acc = partials[0]
+    for s1 in partials[1:]:
+        acc = acc + s1
+    return acc
+
+
+_FORM_FNS = {
+    "direct": _direct,
+    "transposed": _transposed,
+    "tree": _tree,
+    "compress": _compress,
+}
+
+
+@functools.partial(jax.jit, static_argnames=("form", "border_policy"))
+def _filter2d_impl(frame: jax.Array, coeffs: jax.Array, *, form: str,
+                   border_policy: str, border_constant: jax.Array
+                   ) -> jax.Array:
+    # fixed-point path (paper: B=8 pixels, DSP48 accumulates at 48 bits):
+    # int8/uint8 frames multiply-accumulate in int32 and return int32 —
+    # the caller owns the requantisation, as the FPGA datapath does.
+    if frame.dtype in (jnp.int8, jnp.uint8, jnp.int16):
+        frame = frame.astype(jnp.int32)
+        coeffs = coeffs.astype(jnp.int32)
+    spec = BorderSpec(border_policy)  # constant value applied via gather mask
+    frame, add_b, add_c = _as_nhwc(frame)
+    B, H, W, C = frame.shape
+    w = coeffs.shape[-1]
+    r = (w - 1) // 2
+    if border_policy == "constant":
+        # extend() handles the value through the mask path; inline it here
+        spec = BorderSpec("constant", 0.0)
+        xp = extend(frame, r, BorderSpec("duplicate"), axes=(1, 2))
+        # overwrite out-of-frame ring with the constant
+        hi = jnp.arange(-r, H + r)
+        wi = jnp.arange(-r, W + r)
+        mh = ((hi >= 0) & (hi < H))[None, :, None, None]
+        mw = ((wi >= 0) & (wi < W))[None, None, :, None]
+        xp = jnp.where(mh & mw, xp, border_constant.astype(xp.dtype))
+    elif border_policy == "neglect":
+        xp = frame
+    else:
+        xp = extend(frame, r, spec, axes=(1, 2))
+    Ho, Wo = out_shape(H, W, w, spec)
+    y = _FORM_FNS[form](xp, coeffs, Ho, Wo)
+    return _un_nhwc(y, add_b, add_c)
+
+
+def filter2d(frame: jax.Array, coeffs: jax.Array, *, form: str = "direct",
+             border: BorderSpec = BorderSpec("mirror")) -> jax.Array:
+    """Apply a runtime `w×w` filter to a frame.
+
+    frame: [H,W] | [H,W,C] | [B,H,W,C]. coeffs: [w,w] (traced operand).
+    Output keeps the frame size unless ``border.policy == 'neglect'``
+    (paper: Direct keeps H×W, Transposed/neglect shrinks by w−1).
+    """
+    if form not in FORMS:
+        raise ValueError(f"unknown form {form!r}; choose from {FORMS}")
+    return _filter2d_impl(frame, coeffs, form=form,
+                          border_policy=border.policy,
+                          border_constant=jnp.asarray(border.constant))
+
+
+def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
+                border: BorderSpec = BorderSpec("mirror")) -> jax.Array:
+    """Apply N filters in one pass: bank [N,w,w] -> output [..., N].
+
+    The multi-filter analogue of the paper's coefficient file: on the MXU
+    the N coefficient vectors become the matmul RHS [w², N], so the whole
+    bank costs one pass over the frame (input read ONCE for all filters).
+    """
+    frame_n, add_b, add_c = _as_nhwc(frame)
+    B, H, W, C = frame_n.shape
+    w = bank.shape[-1]
+    r = (w - 1) // 2
+    spec = border
+    if border.policy == "neglect":
+        xp = frame_n
+    elif border.policy == "constant":
+        return jnp.stack([filter2d(frame, bank[i], form=form, border=border)
+                          for i in range(bank.shape[0])], axis=-1)
+    else:
+        xp = extend(frame_n, r, spec, axes=(1, 2))
+    Ho, Wo = out_shape(H, W, w, spec)
+    planes = jnp.stack(
+        [_shifted(xp, i, j, Ho, Wo) for i in range(w) for j in range(w)],
+        axis=-1)  # [B,Ho,Wo,C,w2]
+    y = jnp.einsum("bhwck,kn->bhwcn", planes,
+                   bank.reshape(bank.shape[0], -1).T.astype(xp.dtype))
+    y = _un_nhwc(y, add_b, False)
+    if add_c:
+        y = y[..., 0, :]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# XLA-inferred baseline (the paper's "Vivado HLS" analogue)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("border_policy",))
+def filter2d_xla(frame: jax.Array, coeffs: jax.Array,
+                 border_policy: str = "mirror") -> jax.Array:
+    """`lax.conv_general_dilated` — let the compiler infer the structure,
+    as Vivado HLS does in the paper's Table X comparison."""
+    frame_n, add_b, add_c = _as_nhwc(frame)
+    B, H, W, C = frame_n.shape
+    w = coeffs.shape[-1]
+    r = (w - 1) // 2
+    spec = BorderSpec(border_policy)
+    xp = frame_n if border_policy == "neglect" else extend(
+        frame_n, r, spec, axes=(1, 2))
+    # depthwise: apply same 2D kernel to each channel
+    rhs = jnp.broadcast_to(coeffs.astype(xp.dtype)[:, :, None, None],
+                           (w, w, 1, C))
+    y = jax.lax.conv_general_dilated(
+        xp, rhs, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=C)
+    return _un_nhwc(y, add_b, add_c)
+
+
+# ---------------------------------------------------------------------------
+# Accounting (paper Tables II/III analogues — used by benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def macs_per_pixel(w: int, form: str) -> int:
+    """MXU/VPU MAC issue count per output pixel (paper Table II analogue)."""
+    return w * w  # all forms issue w² MACs; they differ in reduction shape
+
+
+def reduction_depth(w: int, form: str) -> int:
+    """Adder stages after the multiplies (paper Table I 'stages')."""
+    n = w * w
+    if form == "direct":
+        return 1                      # systolic: inside the MXU pass
+    if form == "transposed":
+        return n - 1                  # chain
+    if form == "tree":
+        return math.ceil(math.log2(n))
+    if form == "compress":
+        groups = math.ceil(n / 6)
+        return 2 + (groups - 1)       # compress (2) + partial-sum chain
+    raise ValueError(form)
+
+
+def startup_latency_rows(w: int, form: str) -> float:
+    """Rows that must stream in before the first output row (Table III
+    analogue): direct-form needs (w−1)/2 +border rows; transposed/neglect
+    needs w−1 (it discards borders, first valid row is row w−1)."""
+    if form == "transposed":
+        return float(w - 1)
+    return (w - 1) / 2.0
+
+
+def hbm_bytes_per_pixel(dtype_bytes: int = 4, extra_passes: int = 0) -> int:
+    """Single-pass streaming: in once + out once (+ any extra passes)."""
+    return dtype_bytes * (2 + 2 * extra_passes)

@@ -1,0 +1,175 @@
+"""Coefficient file: runtime-programmable filter coefficients (paper §I/§II).
+
+The paper's headline design choice is a *general-purpose* multiplier-based
+filter whose coefficients are a runtime-writable register file, so one piece
+of hardware serves Gaussian blur, Sobel, sharpening, … and higher vision
+layers can rewrite the coefficients between frames. A 7×7 filter also serves
+5×5 and 3×3 by zeroing the outer ring.
+
+TPU translation: coefficients are a **kernel operand** (SMEM/VMEM), never a
+compile-time constant — one compiled executable serves every filter of
+window ≤ w_max. ``CoefficientFile`` is that register file; ``embed_window``
+implements the zero-ring trick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class CoefficientFile:
+    """Runtime coefficient store for a bank of filters of window <= w_max.
+
+    ``table``: [num_slots, w_max, w_max] float array. Slots are rewritable at
+    runtime (`write`), mirroring the paper's coefficient file updated by the
+    higher layers of the vision stack without recompiling/re-synthesising.
+    """
+
+    w_max: int = 7
+    num_slots: int = 8
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        assert self.w_max % 2 == 1, "window must be odd"
+        self.table = jnp.zeros((self.num_slots, self.w_max, self.w_max),
+                               self.dtype)
+
+    def write(self, slot: int, coeffs: jax.Array) -> None:
+        """Write a (w, w) filter (w <= w_max) into ``slot`` (zero-ring pad)."""
+        emb = embed_window(jnp.asarray(coeffs, self.dtype), self.w_max)
+        self.table = self.table.at[slot].set(emb)
+
+    def read(self, slot: int) -> jax.Array:
+        return self.table[slot]
+
+    def as_bank(self) -> jax.Array:
+        """[num_slots, w_max, w_max] — one MXU pass applies all slots."""
+        return self.table
+
+
+def embed_window(coeffs: jax.Array, w_max: int) -> jax.Array:
+    """Centre a (w, w) filter inside a (w_max, w_max) zero frame."""
+    w = coeffs.shape[-1]
+    assert coeffs.shape[-2:] == (w, w) and w <= w_max and w % 2 == 1, coeffs.shape
+    pad = (w_max - w) // 2
+    cfg = [(0, 0)] * (coeffs.ndim - 2) + [(pad, pad), (pad, pad)]
+    return jnp.pad(coeffs, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Preset filter bank (classic low-level vision coefficients)
+# ---------------------------------------------------------------------------
+
+
+def gaussian(w: int, sigma: Optional[float] = None) -> np.ndarray:
+    sigma = sigma if sigma is not None else 0.3 * ((w - 1) * 0.5 - 1) + 0.8
+    r = (w - 1) // 2
+    ax = np.arange(-r, r + 1, dtype=np.float64)
+    g1 = np.exp(-(ax ** 2) / (2 * sigma ** 2))
+    k = np.outer(g1, g1)
+    return (k / k.sum()).astype(np.float32)
+
+
+def box(w: int) -> np.ndarray:
+    return np.full((w, w), 1.0 / (w * w), np.float32)
+
+
+def identity(w: int) -> np.ndarray:
+    k = np.zeros((w, w), np.float32)
+    k[w // 2, w // 2] = 1.0
+    return k
+
+
+def sobel_x(w: int = 3) -> np.ndarray:
+    assert w == 3
+    return np.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], np.float32)
+
+
+def sobel_y(w: int = 3) -> np.ndarray:
+    return sobel_x().T.copy()
+
+
+def laplacian(w: int = 3) -> np.ndarray:
+    assert w == 3
+    return np.array([[0, 1, 0], [1, -4, 1], [0, 1, 0]], np.float32)
+
+
+def sharpen(w: int = 3) -> np.ndarray:
+    assert w == 3
+    return np.array([[0, -1, 0], [-1, 5, -1], [0, -1, 0]], np.float32)
+
+
+def emboss(w: int = 3) -> np.ndarray:
+    assert w == 3
+    return np.array([[-2, -1, 0], [-1, 1, 1], [0, 1, 2]], np.float32)
+
+
+def motion_blur(w: int) -> np.ndarray:
+    k = np.eye(w, dtype=np.float32)
+    return k / w
+
+
+def log_filter(w: int, sigma: Optional[float] = None) -> np.ndarray:
+    """Laplacian-of-Gaussian (feature extraction preset)."""
+    sigma = sigma if sigma is not None else w / 6.0
+    r = (w - 1) // 2
+    ax = np.arange(-r, r + 1, dtype=np.float64)
+    xx, yy = np.meshgrid(ax, ax)
+    rr = xx ** 2 + yy ** 2
+    k = (rr - 2 * sigma ** 2) / (sigma ** 4) * np.exp(-rr / (2 * sigma ** 2))
+    k -= k.mean()
+    return k.astype(np.float32)
+
+
+PRESETS: Dict[str, object] = {
+    "gaussian": gaussian,
+    "box": box,
+    "identity": identity,
+    "sobel_x": sobel_x,
+    "sobel_y": sobel_y,
+    "laplacian": laplacian,
+    "sharpen": sharpen,
+    "emboss": emboss,
+    "motion_blur": motion_blur,
+    "log": log_filter,
+}
+
+
+def preset(name: str, w: int = 3, **kw) -> jnp.ndarray:
+    fn = PRESETS[name]
+    try:
+        k = fn(w, **kw)
+    except AssertionError:
+        # fixed-size presets (sobel/laplacian/...) embedded into a w-window
+        k = np.asarray(embed_window(jnp.asarray(fn(3)), w))
+    return jnp.asarray(k)
+
+
+def default_bank(w_max: int = 7, num_slots: int = 8) -> CoefficientFile:
+    """The register file a smart-vision stack would boot with."""
+    cf = CoefficientFile(w_max=w_max, num_slots=num_slots)
+    names = ["gaussian", "box", "identity", "sobel_x", "sobel_y",
+             "laplacian", "sharpen", "emboss"][:num_slots]
+    for i, n in enumerate(names):
+        k = PRESETS[n]
+        try:
+            cf.write(i, jnp.asarray(k(w_max)))
+        except AssertionError:
+            cf.write(i, jnp.asarray(k(3)))
+    return cf
+
+
+def flops_per_pixel(w: int) -> int:
+    """2·w² (paper: w² multipliers + w²-1 adders, counting MAC = 2 flops)."""
+    return 2 * w * w
+
+
+def arithmetic_intensity(w: int, bytes_per_pixel: int = 8) -> float:
+    """flops per HBM byte for a single-pass filter (in once + out once)."""
+    return flops_per_pixel(w) / bytes_per_pixel

@@ -1,0 +1,98 @@
+"""Row-strip streaming executor — the paper's dataflow at the XLA level.
+
+The FPGA design streams one pixel per clock through a (w−1)-row buffer so a
+full frame never needs to be resident. The TPU translation processes one
+*row strip* per step: a `jax.lax.scan` over strips where the carry is the
+last (w−1) rows of the previous strip — exactly the paper's row buffer. The
+strip height is chosen so (strip + halo) fits a fixed VMEM budget, which is
+what bounds on-chip memory exactly as the row buffer bounds BRAM.
+
+Border rows are sourced from the carry (top) / in-strip lookahead (bottom)
+with the border policy's index remap applied only at the first/last strip —
+the overlapped priming & flushing idea: no stall, no extra pass, the stream
+of strips never stops. ``wrap`` is unsupported here (it needs opposite-edge
+rows, which a row buffer by construction no longer holds — true to the
+paper's dataflow); use ``filter2d`` for wrap.
+
+This file is the *jnp* streaming path; the Pallas kernel in
+``kernels/filter2d`` implements the same schedule with an explicit VMEM
+scratch carry and grid ``dimension_semantics=('arbitrary',)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.borders import BorderSpec, gather_rows
+from repro.core.filter2d import FORMS, _FORM_FNS, _as_nhwc, _un_nhwc, filter2d
+
+
+def strip_height_for_vmem(width: int, channels: int, w: int,
+                          vmem_bytes: int = 8 * 2 ** 20,
+                          dtype_bytes: int = 4) -> int:
+    """Largest strip height whose working set (strip+halo in, strip out,
+    double-buffered) fits the VMEM budget. Mirrors the paper's BRAM bound."""
+    per_row = width * channels * dtype_bytes
+    # in-strip (+halo), out-strip, x2 double buffering
+    h = vmem_bytes // (per_row * 4) - (w - 1)
+    return max(8, int(h))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("form", "border_policy", "strip_h"))
+def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
+                       form: str = "direct", border_policy: str = "mirror",
+                       strip_h: int = 64) -> jax.Array:
+    """Filter a frame strip-by-strip with a carried (w−1)-row buffer.
+
+    Semantics identical to ``filter2d(...)`` for same-size policies (except
+    ``wrap``). Frame height must divide by ``strip_h`` and
+    ``strip_h >= w-1`` (the carry must fit inside one strip).
+    """
+    if border_policy in ("neglect", "wrap"):
+        raise ValueError(f"streaming path does not support {border_policy!r}")
+    spec = BorderSpec(border_policy)
+    x, add_b, add_c = _as_nhwc(frame)
+    B, H, W, C = x.shape
+    w = coeffs.shape[-1]
+    r = (w - 1) // 2
+    assert H % strip_h == 0 and strip_h >= w - 1, (H, strip_h, w)
+    n_strips = H // strip_h
+    if n_strips < 2:  # degenerate launch: whole frame is one strip
+        return filter2d(frame, coeffs, form=form, border=spec)
+
+    # Pre-extend columns once (width axis) — the column mux of the window
+    # cache. This is index remap, not a padded HBM pass, under jit.
+    wi = jnp.arange(-r, W + r)
+    xc = gather_rows(x, wi, spec, axis=2)  # [B, H, W+2r, C]
+
+    strips = xc.reshape(B, n_strips, strip_h, W + 2 * r, C).swapaxes(0, 1)
+
+    def step(carry, inputs):
+        row_buf, i = carry                  # [B, r, W+2r, C] rows above
+        strip, nxt = inputs                 # current strip, lookahead strip
+        # Interior: ext rows = [carry | strip | next strip's first r rows]
+        ext = jnp.concatenate([row_buf, strip, nxt[:, :r]], axis=1)
+        # First strip: top halo = border remap into [strip | lookahead]
+        first_src = jnp.concatenate([strip, nxt[:, :r]], axis=1)  # rows [0, S+r)
+        hi_first = gather_rows(first_src, jnp.arange(-r, strip_h + r), spec,
+                               axis=1)
+        ext = jnp.where(i == 0, hi_first, ext)
+        # Last strip: bottom halo = border remap into [carry | strip]
+        last_src = jnp.concatenate([row_buf, strip], axis=1)  # rows [H-S-r, H)
+        hi_last = gather_rows(last_src, jnp.arange(0, strip_h + 2 * r), spec,
+                              axis=1)
+        ext = jnp.where(i == n_strips - 1, hi_last, ext)
+        y = _FORM_FNS[form](ext, coeffs, strip_h, W)
+        new_buf = strip[:, strip_h - r:] if r else row_buf
+        return (new_buf, i + 1), y
+
+    nxt_strips = jnp.concatenate([strips[1:], strips[-1:]], axis=0)
+    init = (jnp.zeros((B, r, W + 2 * r, C), x.dtype),
+            jnp.asarray(0, jnp.int32))
+    _, ys = jax.lax.scan(step, init, (strips, nxt_strips))
+    y = ys.swapaxes(0, 1).reshape(B, H, W, C)
+    return _un_nhwc(y, add_b, add_c)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (SyntheticTokens, SyntheticFrames,
+                                  make_train_batch, video_stream)

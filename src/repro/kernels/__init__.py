@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (interpret=True on CPU; TPU is the lowering target).
+
+  filter2d — streaming/tiled 2D spatial filter (the paper's §II/§III)
+  dwconv1d — causal depthwise 1D FIR (paper's 1D case; SSM conv path)
+  swattn   — banded flash attention (streaming window over the sequence)
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle). Tests sweep shapes/dtypes vs ref.
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.dwconv1d.ops import dwconv1d_pallas
+from repro.kernels.dwconv1d.ref import dwconv1d_ref

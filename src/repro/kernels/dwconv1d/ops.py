@@ -1,0 +1,36 @@
+"""jit'd wrapper for the dwconv1d kernel: padding, dtype, backend dispatch.
+
+Weight layout note: models store depthwise weights as [C, k] (channel-major,
+matching HF mamba); the kernel wants [k, C] so channels sit on lanes. The
+wrapper transposes — a layout decision, made once at the boundary.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dwconv1d import kernel as K
+from repro.kernels.dwconv1d.ref import dwconv1d_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def dwconv1d_pallas(x: jax.Array, w_ck: jax.Array, b: jax.Array, *,
+                    chunk: int = 512, interpret: Optional[bool] = None
+                    ) -> jax.Array:
+    """x: [B,S,C]; w_ck: [C,k]; b: [C]. Causal depthwise conv via Pallas."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, C = x.shape
+    w = w_ck.T.astype(x.dtype)          # [k, C]: channels on lanes
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    y = K.dwconv1d(x, w, b.astype(x.dtype), chunk=chunk, interpret=interpret)
+    return y[:, :S]

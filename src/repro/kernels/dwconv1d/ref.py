@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the causal depthwise conv1d kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dwconv1d_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: [B,S,C]; w: [k,C]; b: [C] -> [B,S,C].
+
+    y[t] = b + sum_d x[t-(k-1)+d] * w[d], zero history (causal).
+    """
+    B, S, C = x.shape
+    k = w.shape[0]
+    xp = jnp.concatenate([jnp.zeros((B, k - 1, C), x.dtype), x], axis=1)
+    y = jnp.zeros_like(x)
+    for d in range(k):
+        y = y + xp[:, d:d + S, :] * w[d]
+    return y + b

@@ -1,0 +1,2 @@
+from repro.kernels.filter2d.ops import filter2d_pallas
+from repro.kernels.filter2d.ref import filter2d_ref

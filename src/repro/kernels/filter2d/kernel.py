@@ -1,0 +1,175 @@
+"""Pallas TPU kernels for streaming 2D spatial filtering (paper §II + §III).
+
+Two kernels, mirroring the paper's two buffering regimes:
+
+``small``   — the *pixel cache* regime: the whole (border-extended) frame is
+              VMEM-resident; one grid step computes the full output. Valid
+              for frames up to the VMEM budget (the paper's "window cache"
+              generalised to a frame cache).
+
+``stream``  — the *row buffer* regime: grid steps stream row strips
+              sequentially (``dimension_semantics=('arbitrary',)``); a VMEM
+              scratch carries the previous strip across steps (the paper's
+              (w−1)-row buffer — we carry a full strip so output blocks stay
+              tile-aligned). Step 0 only primes the buffer (the paper's
+              *priming* phase); one extra grid step at the end drains the
+              last strip (*flushing*). Output strip i is written at grid
+              step i+1 — overlapped priming & flushing, no stall.
+
+Both kernels compute a VALID convolution over a border-extended input that
+``ops.py`` prepares with the lean index remap of ``core/borders`` (a gather,
+never a padded HBM round-trip). Coefficients are a runtime operand in VMEM
+(the paper's coefficient file): one compiled kernel serves any filter.
+
+The reduction over the w² taps supports the paper's four layouts
+(direct / transposed / tree / compress) — see ``core/filter2d`` for the
+FPGA↔TPU mapping.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128  # TPU lane width: last-dim alignment target
+
+
+def _reduce_taps(ext, coeffs, Ho: int, Wo: int, w: int, form: str):
+    """w² shifted-product reduction in the requested layout. ext: [Ho+2r, *]."""
+    prods = []
+    acc = None
+    for i in range(w):
+        for j in range(w):
+            plane = ext[i:i + Ho, j:j + Wo] * coeffs[i, j]
+            if form == "transposed":     # MAC chain, running accumulator
+                acc = plane if acc is None else acc + plane
+            else:
+                prods.append(plane)
+    if form == "transposed":
+        return acc
+    if form == "direct":                 # systolic-style: single fused sum
+        out = prods[0]
+        for p_ in prods[1:]:
+            out = out + p_
+        return out
+    if form == "tree":                   # pairwise log-depth tree
+        while len(prods) > 1:
+            nxt = [prods[k] + prods[k + 1] for k in range(0, len(prods) - 1, 2)]
+            if len(prods) % 2:
+                nxt.append(prods[-1])
+            prods = nxt
+        return prods[0]
+    if form == "compress":               # groups of 6, then a short chain
+        partials = []
+        for k in range(0, len(prods), 6):
+            g = prods[k:k + 6]
+            s = g[0]
+            for t in g[1:]:
+                s = s + t
+            partials.append(s)
+        out = partials[0]
+        for s in partials[1:]:
+            out = out + s
+        return out
+    raise ValueError(form)
+
+
+# ---------------------------------------------------------------------------
+# small kernel: frame-resident (pixel-cache regime)
+# ---------------------------------------------------------------------------
+
+
+def _small_kernel(x_ref, c_ref, o_ref, *, w: int, form: str):
+    ext = x_ref[...]
+    Ho, Wo = o_ref.shape
+    o_ref[...] = _reduce_taps(ext, c_ref[...], Ho, Wo, w, form)
+
+
+def filter2d_small(x_ext: jax.Array, coeffs: jax.Array, out_shape: Tuple[int, int],
+                   *, form: str = "direct", interpret: bool = True) -> jax.Array:
+    """x_ext: [Ho+2r, Wo+2r(+pad)] extended frame. Returns [Ho, Wo_pad]."""
+    w = coeffs.shape[-1]
+    Ho, Wo = out_shape
+    return pl.pallas_call(
+        functools.partial(_small_kernel, w=w, form=form),
+        out_shape=jax.ShapeDtypeStruct((Ho, Wo), x_ext.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM),
+                  pl.BlockSpec(memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        interpret=interpret,
+        name=f"filter2d_small_{form}",
+    )(x_ext, coeffs)
+
+
+# ---------------------------------------------------------------------------
+# stream kernel: row-strip streaming with a carried line buffer
+# ---------------------------------------------------------------------------
+
+
+def _stream_kernel(x_ref, c_ref, o_ref, buf_ref, *, w: int, S: int,
+                   form: str):
+    """Grid step i reads strip i (clamped), writes output strip i−1.
+
+    buf_ref is the line buffer: the previous strip (S rows), persisted in
+    VMEM across grid steps. Priming at i=0, flushing at i=n.
+    """
+    i = pl.program_id(0)
+    r = (w - 1) // 2
+    cur = x_ref[...]                        # [S, Wp] strip i (or last, clamped)
+    prev = buf_ref[...]
+
+    # ext rows [(i-1)·S, (i-1)·S + S + 2r) of the extended frame
+    ext = jnp.concatenate([prev, cur], axis=0)[: S + 2 * r]
+    Wo = o_ref.shape[1]
+    y = _reduce_taps(ext, c_ref[...], S, Wo, w, form)
+
+    # i = 0 is the priming step: block 0 is revisited (and overwritten) at
+    # i = 1, so an unconditional store is safe and branch-free — the paper's
+    # "no stall / regular dataflow" property.
+    o_ref[...] = y
+    buf_ref[...] = cur
+
+
+def filter2d_stream(x_ext: jax.Array, coeffs: jax.Array,
+                    out_shape: Tuple[int, int], *, strip_h: int = 128,
+                    form: str = "direct", interpret: bool = True
+                    ) -> jax.Array:
+    """Streaming filter. x_ext: [Ho+2r, Wp] (Wp lane-padded), Ho % strip_h == 0.
+
+    Grid has Ho/strip_h + 1 steps (the +1 is the flush step). VMEM working
+    set per step: 2 strips + coeffs — the row-buffer bound, independent of
+    frame height.
+    """
+    w = coeffs.shape[-1]
+    r = (w - 1) // 2
+    Ho, Wo = out_shape
+    Wp = x_ext.shape[1]
+    S = strip_h
+    assert Ho % S == 0 and S >= 2 * r, (Ho, S, r)
+    n = Ho // S
+    # strips of the extended frame: strip i = ext rows [i·S, (i+1)·S); the
+    # final 2r halo rows are folded into the flush step's clamped re-read,
+    # so x_ext must hold Ho + 2r rows and we stream ceil over S.
+    n_in = (Ho + 2 * r + S - 1) // S
+
+    grid = (n + 1,)
+    return pl.pallas_call(
+        functools.partial(_stream_kernel, w=w, S=S, form=form),
+        out_shape=jax.ShapeDtypeStruct((Ho, Wp - 2 * r), x_ext.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((S, Wp), lambda i: (jnp.minimum(i, n_in - 1), 0)),
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # coefficient file
+        ],
+        out_specs=pl.BlockSpec((S, Wp - 2 * r),
+                               lambda i: (jnp.maximum(i - 1, 0), 0)),
+        scratch_shapes=[pltpu.VMEM((S, Wp), x_ext.dtype)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        name=f"filter2d_stream_{form}",
+    )(x_ext, coeffs)

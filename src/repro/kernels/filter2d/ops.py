@@ -1,0 +1,116 @@
+"""jit'd public wrappers for the filter2d Pallas kernels.
+
+The wrapper owns everything the FPGA control unit owned:
+  * border extension as a lean index remap (``core/borders.gather_rows``) —
+    fused by XLA into the kernel's input stream, never a padded HBM pass;
+  * lane alignment: W padded to a multiple of 128 (MXU/VPU lane width);
+  * strip sizing: Ho padded to the strip grid, sized for the VMEM budget;
+  * form/regime dispatch (frame-resident ``small`` vs streaming ``stream``).
+
+On non-TPU backends kernels run in ``interpret=True`` mode (bit-accurate
+Python execution of the kernel body) — the TPU lowering is exercised by the
+dry-run path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.borders import BorderSpec, gather_rows
+from repro.kernels.filter2d import kernel as K
+
+LANE = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _extend_2d(frame: jax.Array, r: int, spec: BorderSpec) -> jax.Array:
+    """[H, W] -> [H+2r, W+2r] under the border policy (index remap)."""
+    if spec.policy == "neglect" or r == 0:
+        return frame
+    hi = jnp.arange(-r, frame.shape[0] + r)
+    wi = jnp.arange(-r, frame.shape[1] + r)
+    frame = gather_rows(frame, hi, spec, axis=0)
+    return gather_rows(frame, wi, spec, axis=1)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("form", "border_policy", "regime", "strip_h",
+                     "interpret"))
+def _filter2d_pallas_2d(frame: jax.Array, coeffs: jax.Array, *, form: str,
+                        border_policy: str, regime: str, strip_h: int,
+                        interpret: bool) -> jax.Array:
+    spec = BorderSpec(border_policy)
+    H, W = frame.shape
+    w = coeffs.shape[-1]
+    r = (w - 1) // 2
+    if spec.policy == "neglect":
+        Ho, Wo = H - 2 * r, W - 2 * r
+        x_ext = frame
+    else:
+        Ho, Wo = H, W
+        x_ext = _extend_2d(frame, r, spec)
+    # lane alignment: pad extended width; padded cols only feed discarded
+    # output cols.
+    x_ext = _pad_to(x_ext, 1, LANE)
+    Wp = x_ext.shape[1]
+    if regime == "small":
+        y = K.filter2d_small(x_ext, coeffs, (Ho, Wp - 2 * r), form=form,
+                             interpret=interpret)
+    elif regime == "stream":
+        S = min(strip_h, Ho)
+        Ho_pad = Ho + ((-Ho) % S)
+        # bottom rows pad with edge replication: only discarded rows read them
+        extra = Ho_pad - Ho
+        if extra:
+            x_ext = jnp.concatenate(
+                [x_ext, jnp.broadcast_to(x_ext[-1:], (extra, Wp))], axis=0)
+        y = K.filter2d_stream(x_ext, coeffs, (Ho_pad, Wp), strip_h=S,
+                              form=form, interpret=interpret)
+        y = y[:Ho]
+    else:
+        raise ValueError(regime)
+    return y[:, :Wo]
+
+
+def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
+                    form: str = "direct",
+                    border: BorderSpec = BorderSpec("mirror"),
+                    regime: str = "stream", strip_h: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Pallas-kernel 2D filter. frame: [H,W] | [H,W,C] | [B,H,W,C].
+
+    ``regime='small'`` keeps the frame VMEM-resident (pixel-cache regime);
+    ``'stream'`` row-streams with a carried line buffer (row-buffer regime).
+    """
+    if border.policy == "wrap":
+        raise ValueError("wrap needs opposite-edge rows; use core.filter2d")
+    if border.policy == "constant" and border.constant != 0.0:
+        raise NotImplementedError("non-zero constant: use core.filter2d")
+    interpret = _default_interpret() if interpret is None else interpret
+    fn = functools.partial(_filter2d_pallas_2d, coeffs=coeffs, form=form,
+                           border_policy=border.policy, regime=regime,
+                           strip_h=strip_h, interpret=interpret)
+    if frame.ndim == 2:
+        return fn(frame)
+    if frame.ndim == 3:   # [H, W, C] -> vmap over channels
+        return jax.vmap(fn, in_axes=2, out_axes=2)(frame)
+    if frame.ndim == 4:   # [B, H, W, C]
+        return jax.vmap(jax.vmap(fn, in_axes=2, out_axes=2))(frame)
+    raise ValueError(frame.shape)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the filter2d Pallas kernels.
+
+The oracle is the (already numpy-validated) ``core/filter2d`` direct form:
+all kernel forms must match it to float tolerance on every shape/dtype in
+the test sweep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.borders import BorderSpec
+from repro.core.filter2d import filter2d as _filter2d
+
+
+def filter2d_ref(frame: jax.Array, coeffs: jax.Array,
+                 border_policy: str = "mirror",
+                 constant: float = 0.0) -> jax.Array:
+    return _filter2d(frame, coeffs, form="direct",
+                     border=BorderSpec(border_policy, constant))

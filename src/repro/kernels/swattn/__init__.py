@@ -1,0 +1,2 @@
+from repro.kernels.swattn.ops import swattn_pallas
+from repro.kernels.swattn.ref import swattn_ref

@@ -1,0 +1,44 @@
+"""jit'd wrapper for banded flash attention: [B,S,H,hd] API, padding, GQA."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swattn import kernel as K
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "blk", "scale", "interpret"))
+def swattn_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
+                  scale: Optional[float] = None, blk: int = 128,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Sliding-window (window>0) or full (window=0) causal attention.
+
+    q: [B,S,H,hd]; k,v: [B,S,KV,hd] (H % KV == 0). Returns [B,S,H,hd].
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    blk = min(blk, max(16, 1 << (S - 1).bit_length()))  # small-S test cases
+    pad = (-S) % blk
+    if pad:
+        cfg = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, cfg), jnp.pad(k, cfg), jnp.pad(v, cfg)
+    Sp = S + pad
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Sp, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Sp, hd)
+    of = K.swattn(qf, kf, vf, window=window, num_q_heads=H,
+                  num_kv_heads=KV, scale=scale, s_true=S, blk=blk,
+                  interpret=interpret)
+    o = of.reshape(B, H, Sp, hd).transpose(0, 2, 1, 3)
+    return o[:, :S]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for banded flash attention: masked dense softmax."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def swattn_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
+               scale: float) -> jax.Array:
+    """q: [B,S,H,hd]; k, v: [B,S,KV,hd]. Dense masked attention oracle."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok = ok & (qpos - kpos < window)
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: prove every (architecture × shape × mesh) cell
+lowers, SPMD-partitions, and compiles on the production meshes.
+
+For each cell the appropriate step function is built:
+  train_4k            -> train_step (fwd + bwd + AdamW update)
+  prefill_32k         -> prefill (cache build + last-token logits)
+  decode_32k/long_500k-> serve_step (one token against a seq_len cache)
+
+and ``jax.jit(fn, in_shardings=...).lower(*abstract).compile()`` must
+succeed on the single-pod (16, 16) mesh and the 2-pod (2, 16, 16) mesh.
+``compiled.memory_analysis()`` proves the per-device footprint fits;
+``compiled.cost_analysis()`` + the compiled HLO feed §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi_6b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--out experiments/dryrun]
+"""
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, RunConfig, resolve,
+                                supported_shapes, get_model_config)
+from repro.launch.mesh import make_production_mesh
+from repro.models import module as mod
+from repro.models import registry
+from repro.optim import adamw_abstract
+from repro.optim.adamw import AdamWState
+from repro.sharding import rules as shd_rules
+from repro.training.step import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly
+# ---------------------------------------------------------------------------
+
+
+def _is_axes_leaf(ax) -> bool:
+    return (isinstance(ax, tuple)
+            and all(e is None or isinstance(e, str) for e in ax))
+
+
+def tree_shardings(ab, ax, ctx: shd_rules.ShardingCtx):
+    """Zip an abstract tree with its logical-axes tree -> NamedShardings."""
+    if ab is None:
+        return None
+    if isinstance(ab, dict):
+        return {k: tree_shardings(ab[k], ax[k], ctx) for k in ab}
+    if isinstance(ab, (list, tuple)) and not hasattr(ab, "shape"):
+        sub = [tree_shardings(a, x, ctx) for a, x in zip(ab, ax)]
+        return type(ab)(sub)
+    assert _is_axes_leaf(ax), (ab, ax)
+    return ctx.sharding(ab.shape, ax)
+
+
+def batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct],
+                    ctx: shd_rules.ShardingCtx):
+    return {k: ctx.sharding(s.shape, ("act_batch",)
+                            + (None,) * (len(s.shape) - 1))
+            for k, s in specs.items()}
+
+
+def _rep(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# per-kind lowering builders
+# ---------------------------------------------------------------------------
+
+
+def build_lowered(rc: RunConfig, mesh: Mesh, kind: str):
+    """Returns (lowered, ctx). kind in {train, prefill, decode}."""
+    bundle = registry.build(rc)
+    overrides = ()
+    if rc.sharding_profile == "ep":
+        overrides = shd_rules.EP_OVERRIDES
+    if kind == "decode":
+        profile = "decode"
+    elif rc.sharding_profile in ("sp", "zero1", "cp", "dp"):
+        profile = {"sp": "train_sp", "zero1": "zero1",
+                   "cp": "kv_seq", "dp": "dp_only"}[rc.sharding_profile]
+    else:
+        profile = "train"
+    ctx = shd_rules.make_ctx(mesh, profile, overrides)
+    pshard = ctx.spec_tree_shardings(bundle.specs)
+    params_ab = mod.abstract_params(bundle.specs)
+    B, S = rc.shape.global_batch, rc.shape.seq_len
+    # ZeRO-1: optimizer moments keep the FSDP (data-sharded) layout even
+    # though compute weights are data-replicated
+    opt_ctx = shd_rules.make_ctx(mesh, "train") \
+        if rc.sharding_profile == "zero1" else ctx
+
+    with mesh:
+        if kind == "train":
+            step = make_train_step(bundle, rc, shd=ctx)
+            opt_ab = adamw_abstract(bundle.specs)
+            mvshard = opt_ctx.spec_tree_shardings(bundle.specs)
+            opt_shard = AdamWState(step=_rep(mesh), m=mvshard, v=mvshard)
+            bspecs = bundle.input_specs("train")
+            bshard = batch_shardings(bspecs, ctx)
+            fn = jax.jit(step, in_shardings=(pshard, opt_shard, bshard),
+                         donate_argnums=(0, 1))
+            return fn.lower(params_ab, opt_ab, bspecs), ctx
+        if kind == "prefill":
+            bspecs = bundle.input_specs("prefill")
+            bshard = batch_shardings(bspecs, ctx)
+            fn = jax.jit(lambda p, b: bundle.prefill(p, b, shd=ctx),
+                         in_shardings=(pshard, bshard))
+            return fn.lower(params_ab, bspecs), ctx
+        if kind == "decode":
+            caches_ab = bundle.cache_abstract(B, S)
+            cshard = tree_shardings(caches_ab, bundle.cache_axes(), ctx)
+            ispec = bundle.input_specs("decode")
+            ishard = batch_shardings(ispec, ctx)
+            cur_ab = jax.ShapeDtypeStruct((), jnp.int32)
+
+            fn = jax.jit(
+                lambda p, i, c, cur: bundle.decode_step(p, i["inputs"], c,
+                                                        cur, shd=ctx),
+                in_shardings=(pshard, ishard, cshard, _rep(mesh)),
+                donate_argnums=(2,))
+            return fn.lower(params_ab, ispec, caches_ab, cur_ab), ctx
+    raise ValueError(kind)
+
+
+def shape_kind(shape_name: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape_name]
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rc = resolve(arch, shape_name, multi_pod=multi_pod)
+    kind = shape_kind(shape_name)
+    t0 = time.time()
+    lowered, ctx = build_lowered(rc, mesh, kind)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    report = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": mesh.devices.size,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": cost.get("flops", -1.0),
+        "bytes_per_device": cost.get("bytes accessed", -1.0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "dropped_shardings": len(ctx.dropped),
+    }
+    if keep_hlo:
+        report["hlo_text"] = compiled.as_text()
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="dir for per-cell JSON")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            mc = get_model_config(arch)
+            for shape in supported_shapes(mc):
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = []
+    for arch, shape, mp in cells:
+        tag = f"{arch}/{shape}/{'2x16x16' if mp else '16x16'}"
+        try:
+            rep = run_cell(arch, shape, mp)
+            gib = (rep["memory"]["argument_bytes"] or 0) / 2 ** 30
+            print(f"[dryrun] OK   {tag}: compile {rep['compile_s']}s, "
+                  f"args {gib:.2f} GiB/dev, "
+                  f"flops/dev {rep['flops_per_device']:.3e}")
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                fn = os.path.join(args.out, tag.replace("/", "__") + ".json")
+                with open(fn, "w") as f:
+                    json.dump(rep, f, indent=1)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            print(f"[dryrun] FAIL {tag}: {type(e).__name__}: {e}")
+            failures.append((tag, str(e)))
+    if failures:
+        print(f"[dryrun] {len(failures)} failures")
+        sys.exit(1)
+    print(f"[dryrun] all {len(cells)} cells compiled")
+
+
+if __name__ == "__main__":
+    main()

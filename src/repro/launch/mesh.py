@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_moe_mesh(*, multi_pod: bool = False, experts: int = 8):
+    """Same chips, re-axed for expert parallelism: the 16-way 'model' axis
+    splits into ('expert', 'model') = (8, 2). Attention/MLP TP spans both
+    sub-axes (16-way as before); MoE experts shard over 'expert' so the
+    dispatch becomes an all-to-all instead of replicated compute + a
+    16-way row-parallel all-reduce on the padded dispatch layout."""
+    m = 16 // experts
+    shape = (2, 16, experts, m) if multi_pod else (16, experts, m)
+    axes = (("pod", "data", "expert", "model") if multi_pod
+            else ("data", "expert", "model"))
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU multi-device tests (requires the host-platform
+    device-count flag to be set by the test harness)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,376 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Roofline analysis from the compiled dry-run artifacts (TPU v5e target).
+
+CPU container: no wall-time MFU. The three roofline terms are derived per
+(arch × shape) on the single-pod mesh:
+
+  compute_term    = HLO_FLOPs / (chips × 197e12)
+  memory_term     = HLO_bytes / (chips × 819e9)
+  collective_term = collective_wire_bytes / (chips × 50e9)
+
+**Scan correction.** ``compiled.cost_analysis()`` counts a while-loop body
+ONCE (verified empirically in this container), and every model here scans
+over layers. The tool therefore reconstructs exact totals from *analysis
+lowerings* that are affine in layer counts:
+
+  F(cell) = F₀ + Σ_class n_class · (F_class − F₀) (+ inner-scan corrections)
+
+where F₀ lowers the depth-0 model (embed + norm + head + loss + optimizer
+− the fixed part) and F_class lowers a 1-layer model of each distinct
+(kind, window) layer class via ``ModelConfig.stage_override`` — 1-layer
+stages make every layer scan trip once, so "body counted once" is exact.
+Analysis lowerings disable inner flop-invariant chunking (q_chunk, loss
+chunk) so no other while loop survives — except the SSD/sLSTM recurrences,
+whose bodies are lowered STANDALONE and multiplied by their known trip
+counts (global shapes / device count; these bodies are data-parallel).
+
+Collective bytes are parsed from the compiled (post-SPMD) HLO text: shapes
+there are per-device, so summing operand bytes of collective ops with
+per-op wire-byte factors gives wire bytes per device per step.
+"""
+import argparse
+import dataclasses
+import json
+import math
+import re
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ARCH_IDS, RunConfig, TrainConfig,
+                                get_model_config, resolve, supported_shapes)
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+
+# TPU v5e (per brief)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([0-9,]*)\]")
+
+# wire-byte factor per result byte (ring algorithms, large n)
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def parse_collective_bytes(hlo_text: str, top: Optional[list] = None,
+                           local_batch: int = 0) -> Dict[str, float]:
+    """Sum per-device wire bytes of collective ops in a post-SPMD module.
+
+    ``top``: optional list that receives (bytes, kind, shape-head) tuples
+    for the largest individual ops (hillclimb diagnosis).
+
+    **bf16 correction** (``local_batch``>0): the CPU backend's
+    FloatNormalization widens every bf16 dot to f32 BEFORE partitioning
+    (verified in-container), so activation collectives appear at 4-byte
+    width that would be 2-byte on TPU. Tensors with ndim>=3 whose leading
+    dim equals the per-device batch are classified as activations and
+    halved. Gradient/optimizer collectives (weight-shaped) stay f32 —
+    correct, since master params are f32.
+    """
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        kind = m.group(1)
+        # result type(s): everything left of '= ... <opname>('
+        head = line.split(m.group(0))[0]
+        bytes_ = 0.0
+        for dt, dims in _SHAPE_RE.findall(head):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            dl = []
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+                    dl.append(int(d))
+            width = _DTYPE_BYTES[dt]
+            if (local_batch and dt == "f32" and len(dl) >= 3
+                    and local_batch in dl[:3]):
+                width = 2.0            # bf16-on-TPU activation tensor
+            bytes_ += n * width
+        wire = bytes_ * _WIRE_FACTOR[kind]
+        out[kind] = out.get(kind, 0.0) + wire
+        if top is not None and wire > 0:
+            top.append((wire, kind, head.strip()[:120]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analysis lowerings
+# ---------------------------------------------------------------------------
+
+
+def _analysis_rc(rc: RunConfig, stage_override) -> RunConfig:
+    mc = dataclasses.replace(
+        rc.model, stage_override=tuple(stage_override),
+        num_layers=sum(c for _, _, c in stage_override),
+        q_chunk=0)
+    tr = dataclasses.replace(rc.train, loss_chunk=10 ** 9, microbatch=0)
+    return dataclasses.replace(rc, model=mc, train=tr)
+
+
+def _whisper_analysis_rc(rc: RunConfig, enc: int, dec: int) -> RunConfig:
+    mc = dataclasses.replace(rc.model, encoder_layers=enc, num_layers=dec,
+                             q_chunk=0)
+    tr = dataclasses.replace(rc.train, loss_chunk=10 ** 9, microbatch=0)
+    return dataclasses.replace(rc, model=mc, train=tr)
+
+
+def _cell_costs(rc: RunConfig, mesh, kind: str, detail: bool = False
+                ) -> Dict[str, float]:
+    lowered, _ = dr.build_lowered(rc, mesh, kind)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    top = [] if detail else None
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(ax, 1)
+    lb = max(1, rc.shape.global_batch // dp)
+    coll = parse_collective_bytes(compiled.as_text(), top,
+                                  local_batch=lb)
+    res = {"flops": float(ca.get("flops", 0.0)),
+           "bytes": float(ca.get("bytes accessed", 0.0)),
+           "coll": sum(coll.values()), "coll_by_kind": coll}
+    if detail:
+        top.sort(reverse=True)
+        res["top_collectives"] = top[:12]
+    return res
+
+
+def _classes(mc) -> List[Tuple[str, int, int]]:
+    """Distinct (kind, window) classes with their total layer counts."""
+    from repro.models.transformer import make_stages
+    agg: Dict[Tuple[str, int], int] = {}
+    for st in make_stages(mc):
+        agg[(st.kind, st.window)] = agg.get((st.kind, st.window), 0) \
+            + st.count
+    return [(k, w, c) for (k, w), c in agg.items()]
+
+
+# -- inner recurrence corrections (per class, per device) -------------------
+
+
+def _ssd_body_cost(mc, B: int, S: int) -> Tuple[float, float, int]:
+    """(flops, bytes) of one SSD chunk body at GLOBAL shapes, + trip count."""
+    from repro.models.ssm import ssd_body
+    d_in = mc.ssm_expand * mc.d_model
+    H = mc.mamba_heads or max(1, d_in // 64)
+    dh = d_in // H
+    N = mc.ssm_state
+    c = min(mc.ssd_chunk or 256, S)
+    trips = S // c
+    f32 = jnp.float32
+    h = jax.ShapeDtypeStruct((B, H, dh, N), f32)
+    inp = (jax.ShapeDtypeStruct((B, c, H, dh), f32),
+           jax.ShapeDtypeStruct((B, c, H), f32),
+           jax.ShapeDtypeStruct((B, c, N), f32),
+           jax.ShapeDtypeStruct((B, c, N), f32))
+    ca = jax.jit(ssd_body).lower(h, inp).compile().cost_analysis()
+    return float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0)), trips
+
+
+def _slstm_body_cost(mc, B: int, S: int) -> Tuple[float, float, int]:
+    from repro.models.xlstm import slstm_step
+    d = mc.d_model
+    heads = mc.num_heads
+    f32 = jnp.float32
+    carry = tuple(jax.ShapeDtypeStruct((B, d), f32) for _ in range(4))
+    g = jax.ShapeDtypeStruct((B, 4 * d), f32)
+    r = jax.ShapeDtypeStruct((heads, 4, d // heads, d // heads), f32)
+    b = jax.ShapeDtypeStruct((4 * d,), f32)
+    fn = lambda c_, g_, r_, b_: slstm_step(c_, g_, r_, b_, heads)  # noqa:E731
+    ca = jax.jit(fn).lower(carry, g, r, b).compile().cost_analysis()
+    return float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0)), S
+
+
+def _mlstm_body_cost(mc, B: int, S: int) -> Tuple[float, float, int]:
+    from repro.models.xlstm import mlstm_chunk_body
+    d_in = int(2.0 * mc.d_model)
+    H = mc.num_heads
+    dh = d_in // H
+    c = S if S % 256 else 256
+    c = min(c, S)
+    trips = S // c
+    f32 = jnp.float32
+    carry = (jax.ShapeDtypeStruct((B, H, dh, dh), f32),
+             jax.ShapeDtypeStruct((B, H, dh), f32),
+             jax.ShapeDtypeStruct((B, H), f32))
+    inp = tuple(jax.ShapeDtypeStruct((B, c, H, dh), f32) for _ in range(3)) \
+        + tuple(jax.ShapeDtypeStruct((B, c, H), f32) for _ in range(2))
+    ca = jax.jit(mlstm_chunk_body).lower(carry, inp).compile().cost_analysis()
+    return float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0)), trips
+
+
+def _inner_correction(kind: str, mc, B: int, S: int, n_layers: int,
+                      n_dev: int, train: bool) -> Tuple[float, float]:
+    """Extra per-device (flops, bytes) for inner recurrences: body cost ×
+    (trips − 1) × layers (body once already counted), /devices (these
+    bodies are batch/channel-parallel), ×3 for fwd+bwd in training."""
+    if S <= 1:
+        return 0.0, 0.0
+    if kind in ("hymba", "mamba"):
+        f, b, trips = _ssd_body_cost(mc, B, S)
+    elif kind == "slstm":
+        f, b, trips = _slstm_body_cost(mc, B, S)
+    elif kind == "mlstm":
+        f, b, trips = _mlstm_body_cost(mc, B, S)
+    else:
+        return 0.0, 0.0
+    mult = 3.0 if train else 1.0          # bwd ≈ 2× fwd for the recurrence
+    return (f * (trips - 1) * n_layers * mult / n_dev,
+            b * (trips - 1) * n_layers * mult / n_dev)
+
+
+# ---------------------------------------------------------------------------
+# model flops (analytic)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(rc: RunConfig, kind: str) -> float:
+    mc = rc.model
+    B, S = rc.shape.global_batch, rc.shape.seq_len
+    n_active = mc.active_param_count()
+    embed = mc.d_model * mc.vocab_size * (1 if mc.tie_embeddings else 2)
+    n = max(n_active - embed, 1)
+    if kind == "train":
+        tokens = B * (mc.max_target_positions if mc.family == "encdec"
+                      else S)
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        return 2.0 * n * B * S
+    return 2.0 * n * B                    # decode: one token per row
+
+
+# ---------------------------------------------------------------------------
+# per-cell roofline
+# ---------------------------------------------------------------------------
+
+
+def analyze_cell(arch: str, shape_name: str, *, verbose: bool = True,
+                 profile: str = "default") -> Dict[str, Any]:
+    if profile == "ep":
+        from repro.launch.mesh import make_moe_mesh
+        mesh = make_moe_mesh(multi_pod=False)
+    else:
+        mesh = make_production_mesh(multi_pod=False)
+    n_dev = mesh.devices.size
+    rc = resolve(arch, shape_name, multi_pod=False,
+                 sharding_profile=profile)
+    if profile == "ep":
+        rc = dataclasses.replace(
+            rc, model=dataclasses.replace(rc.model, moe_force_ep=True))
+    if profile == "kv8":
+        rc = dataclasses.replace(
+            rc, model=dataclasses.replace(rc.model, kv_cache_dtype="int8"))
+    kind = dr.shape_kind(shape_name)
+    mc = rc.model
+    B, S = rc.shape.global_batch, rc.shape.seq_len
+
+    if mc.family == "encdec":
+        f00 = _cell_costs(_whisper_analysis_rc(rc, 0, 0), mesh, kind)
+        fe = _cell_costs(_whisper_analysis_rc(rc, 1, 0), mesh, kind)
+        fd = _cell_costs(_whisper_analysis_rc(rc, 0, 1), mesh, kind)
+        tot = {}
+        for key in ("flops", "bytes", "coll"):
+            tot[key] = (f00[key]
+                        + mc.encoder_layers * (fe[key] - f00[key])
+                        + mc.num_layers * (fd[key] - f00[key]))
+        corrections = (0.0, 0.0)
+    else:
+        classes = _classes(mc)
+        rc0 = _analysis_rc(rc, [(classes[0][0], classes[0][1], 0)])
+        # depth-0: num_layers=0 → no stages at all
+        rc0 = dataclasses.replace(
+            rc0, model=dataclasses.replace(rc0.model, stage_override=(),
+                                           num_layers=0))
+        f00 = _cell_costs(rc0, mesh, kind)
+        tot = dict(f00)
+        corrections = [0.0, 0.0]
+        for (k_, w_, cnt) in classes:
+            fc = _cell_costs(_analysis_rc(rc, [(k_, w_, 1)]), mesh, kind)
+            for key in ("flops", "bytes", "coll"):
+                tot[key] += cnt * (fc[key] - f00[key])
+            cf, cb = _inner_correction(k_, mc, B, S if kind != "decode"
+                                       else 1, cnt, n_dev, kind == "train")
+            corrections[0] += cf
+            corrections[1] += cb
+        tot["flops"] += corrections[0]
+        tot["bytes"] += corrections[1]
+
+    compute_t = tot["flops"] / PEAK_FLOPS
+    memory_t = tot["bytes"] / HBM_BW
+    coll_t = tot["coll"] / ICI_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rc, kind)
+    hlo_global = tot["flops"] * n_dev
+    report = {
+        "arch": arch, "shape": shape_name, "kind": kind, "devices": n_dev,
+        "flops_per_device": tot["flops"], "bytes_per_device": tot["bytes"],
+        "collective_bytes_per_device": tot["coll"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "profile": profile,
+        "useful_ratio": mf / max(hlo_global, 1.0),
+        "bound_step_s": max(terms.values()),
+        "roofline_fraction": (min(1.0, (mf / n_dev / PEAK_FLOPS)
+                                  / max(max(terms.values()), 1e-12))),
+    }
+    if verbose:
+        print(f"[roofline] {arch}/{shape_name}: "
+              f"C {compute_t*1e3:.2f}ms M {memory_t*1e3:.2f}ms "
+              f"X {coll_t*1e3:.2f}ms -> {report['dominant']}-bound, "
+              f"useful {report['useful_ratio']:.2f}, "
+              f"roofline {report['roofline_fraction']:.2%}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--profile", default="default")
+    args = ap.parse_args(argv)
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in supported_shapes(get_model_config(arch)):
+                cells.append((arch, shape))
+    else:
+        cells = [(args.arch, args.shape)]
+    reports = []
+    for arch, shape in cells:
+        try:
+            reports.append(analyze_cell(arch, shape,
+                                        profile=args.profile))
+        except Exception as e:  # noqa: BLE001
+            print(f"[roofline] FAIL {arch}/{shape}: "
+                  f"{type(e).__name__}: {e}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(reports, f, indent=1)
+        print(f"[roofline] wrote {len(reports)} reports to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

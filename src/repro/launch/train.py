@@ -1,0 +1,107 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch <id> [--tiny] \
+      [--steps N] [--ckpt-dir DIR] [--seq S] [--batch B] [--mesh dxm] \
+      [--grad-compression int8_ef]
+
+On this CPU container ``--tiny`` swaps in the reduced same-family config;
+on a real cluster the full config + production mesh apply unchanged (the
+launcher is identical — that's the point of the config system).
+Multi-process clusters initialise jax.distributed from env vars before
+calling into the trainer (standard TPU pod runtime), which is a no-op
+here.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import SHAPES, SINGLE_POD, RunConfig, TrainConfig, resolve
+from repro.configs.tiny import tiny_of
+from repro.runtime import PreemptionGuard
+from repro.training.trainer import train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 2x2 -> (data=2, model=2) on local devices")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        mc = tiny_of(args.arch)
+        sh = dataclasses.replace(SHAPES[args.shape],
+                                 seq_len=args.seq or 128,
+                                 global_batch=args.batch or 8)
+    else:
+        rc0 = resolve(args.arch, args.shape)
+        mc, sh = rc0.model, rc0.shape
+        if args.seq or args.batch:
+            sh = dataclasses.replace(sh, seq_len=args.seq or sh.seq_len,
+                                     global_batch=args.batch
+                                     or sh.global_batch)
+
+    tc = TrainConfig(learning_rate=args.lr, total_steps=max(args.steps, 10),
+                     warmup_steps=min(100, args.steps // 10 + 1),
+                     microbatch=args.microbatch, remat_policy=args.remat,
+                     grad_compression=args.grad_compression)
+    rc = RunConfig(model=mc, shape=sh, mesh=SINGLE_POD, train=tc)
+
+    mesh = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[:len(dims)] if len(dims) <= 2 else \
+            ("pod", "data", "model")
+        mesh = jax.make_mesh(dims, axes)
+
+    guard = PreemptionGuard()
+    if args.grad_compression == "int8_ef":
+        _run_compressed(rc, mesh, args)
+        return
+    rep = train_loop(rc, num_steps=args.steps, mesh=mesh,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     guard=guard)
+    print(f"[train] done: {rep.steps_run} steps, "
+          f"final loss {rep.final_metrics.get('loss'):.4f}, "
+          f"stragglers {rep.straggler_steps}, preempted {rep.preempted}")
+
+
+def _run_compressed(rc, mesh, args):
+    """Pure-DP path with hierarchical int8-EF gradient reduction."""
+    import jax.numpy as jnp
+    from repro.data import make_train_batch
+    from repro.models import registry
+    from repro.optim import adamw_init
+    from repro.training.dp_shardmap import (init_error_feedback,
+                                            make_compressed_dp_step)
+    assert mesh is not None, "--grad-compression needs --mesh"
+    bundle = registry.build(rc)
+    params = bundle.init_params(jax.random.key(rc.train.seed))
+    opt = adamw_init(params)
+    err = init_error_feedback(params, mesh)
+    step_fn = make_compressed_dp_step(bundle, rc, mesh)
+    for step in range(args.steps):
+        batch = make_train_batch(rc, step)
+        params, opt, err, metrics = step_fn(params, opt, err, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"[train/int8_ef] step {step} "
+                  f"loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""GQA attention: training/prefill (q-chunked, flash-style at the XLA level),
+decode against a (possibly ring-buffered, sequence-sharded) KV cache.
+
+Masking is position-based: every cached key carries its absolute position
+(PAD = -1 never attended, META = -2 always attended — hymba meta tokens act
+as attention sinks). This one code path serves full attention, sliding
+windows (dynamic per-layer width, so gemma3's 5:1 local:global pattern runs
+inside one scanned stage), ring-buffer decode caches, and whisper's
+bidirectional/cross attention (causal=False).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import p
+
+PAD_POS = -1
+META_POS = -2
+
+NEG_INF = -1e30
+
+
+def attn_specs(d: int, num_heads: int, num_kv: int, head_dim: int,
+               use_qk_norm: bool = False):
+    specs = {
+        "wq": p((d, num_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": p((d, num_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": p((d, num_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": p((num_heads, head_dim, d), ("heads", "head_dim", "embed")),
+    }
+    if use_qk_norm:
+        specs["q_norm"] = p((head_dim,), ("head_dim",), init="ones")
+        specs["k_norm"] = p((head_dim,), ("head_dim",), init="ones")
+    return specs
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def qkv_project(x: jax.Array, params, use_qk_norm: bool = False):
+    """x: [B,S,D] -> q [B,S,H,hd], k,v [B,S,Kv,hd] (pre-RoPE)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if use_qk_norm:
+        q = _rms(q, params["q_norm"])
+        k = _rms(k, params["k_norm"])
+    return q, k, v
+
+
+def out_project(o: jax.Array, params) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(o.dtype))
+
+
+def repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """[B,S,Kv,hd] -> [B,S,H,hd] by repetition (TP-rank-local replication)."""
+    B, S, Kv, hd = k.shape
+    if Kv == num_heads:
+        return k
+    rep = num_heads // Kv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _mask(q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
+          window, sinks: int = 0) -> jax.Array:
+    """q_pos [B,Sq], kv_pos [B,Skv] -> bool [B,1,Sq,Skv].
+
+    ``sinks`` > 0: the first ``sinks`` absolute positions are always
+    attended (hymba meta tokens act as attention sinks), escaping the
+    sliding window but not causality.
+    """
+    qp = q_pos[:, :, None]          # [B,Sq,1]
+    kp = kv_pos[:, None, :]         # [B,1,Skv]
+    valid = kp != PAD_POS
+    meta = kp == META_POS
+    ok = valid
+    if causal:
+        ok = ok & (kp <= qp)
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        in_win = jnp.where(w > 0, (qp - kp) < w, True)
+        if sinks:
+            in_win = in_win | (kp < sinks)
+        ok = ok & in_win
+    ok = ok | meta
+    return ok[:, None, :, :]
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array,
+           q_pos: jax.Array, kv_pos: jax.Array, *,
+           causal: bool = True, window=None, softcap: float = 0.0,
+           shd=None, q_chunk: int = 1024, scale: Optional[float] = None,
+           sinks: int = 0) -> jax.Array:
+    """Full attention math. q [B,Sq,H,hd]; k,v [B,Skv,H,hd] (kv pre-repeated).
+
+    Chunks over q (scan) so [Sq,Skv] scores are never fully materialised —
+    the paper's "no full-frame buffering" principle applied to the score
+    plane. Softmax in fp32.
+    """
+    B, Sq, H, hd = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if shd is not None:
+        # inside attention the 'model' axis belongs to heads (TP); the seq
+        # dim is deliberately unclaimed so SP (act_seq->model outside the
+        # block) hands the axis over via one gather, Megatron-SP style.
+        q = shd.constrain(q, "act_batch", None, "act_heads", None)
+        k = shd.constrain(k, "act_batch", "act_kv_seq", "act_heads", None)
+        v = shd.constrain(v, "act_batch", "act_kv_seq", "act_heads", None)
+
+    def block(q_blk, qp_blk):
+        s = jnp.einsum("bqhk,bshk->bhqs", q_blk, k).astype(jnp.float32) * scale
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        m = _mask(qp_blk, kv_pos, causal, window, sinks)
+        s = jnp.where(m, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+    if q_chunk and Sq > q_chunk and Sq % q_chunk == 0:
+        n = Sq // q_chunk
+        qc = q.reshape(B, n, q_chunk, H, hd).swapaxes(0, 1)
+        pc = q_pos.reshape(B, n, q_chunk).swapaxes(0, 1)
+
+        def body(_, qb):
+            return None, block(qb[0], qb[1])
+
+        _, out = jax.lax.scan(body, None, (qc, pc))
+        out = out.swapaxes(0, 1).reshape(B, Sq, H, hd)
+    else:
+        out = block(q, q_pos)
+    if shd is not None:
+        out = shd.constrain(out, "act_batch", None, "act_heads", None)
+    return out
+
+
+# -- KV cache (contiguous or ring; optional int8 quantisation) ---------------
+#
+# int8 KV: decode cells are memory-bound on cache streaming (§Roofline), so
+# halving cache bytes halves the dominant term. Scheme: symmetric per-
+# (position, head) scales over head_dim — k_int8[b,s,h,:] * k_scale[b,s,h].
+# Quantise at write (once per token), dequantise at read.
+
+def quantize_kv(x: jax.Array):
+    """[B,S,KV,hd] -> (int8 values, [B,S,KV] f32 scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_cache(batch: int, cache_len: int, num_kv: int, head_dim: int,
+               dtype=jnp.bfloat16):
+    if dtype == jnp.int8:
+        return {
+            "k": jnp.zeros((batch, cache_len, num_kv, head_dim), jnp.int8),
+            "v": jnp.zeros((batch, cache_len, num_kv, head_dim), jnp.int8),
+            "k_scale": jnp.zeros((batch, cache_len, num_kv), jnp.float32),
+            "v_scale": jnp.zeros((batch, cache_len, num_kv), jnp.float32),
+            "pos": jnp.full((cache_len,), PAD_POS, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, cache_len, num_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, num_kv, head_dim), dtype),
+        # absolute position of each slot; PAD_POS = empty
+        "pos": jnp.full((cache_len,), PAD_POS, jnp.int32),
+    }
+
+
+def cache_abstract(batch: int, cache_len: int, num_kv: int, head_dim: int,
+                   dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        init_cache(batch, cache_len, num_kv, head_dim, dtype))
+
+
+def cache_axes(quantized: bool = False):
+    """Logical axes for cache leaves (sequence-sharded in decode profile)."""
+    ax = {"k": ("act_batch", "cache_seq", None, None),
+          "v": ("act_batch", "cache_seq", None, None),
+          "pos": ("cache_seq",)}
+    if quantized:
+        ax["k_scale"] = ("act_batch", "cache_seq", None)
+        ax["v_scale"] = ("act_batch", "cache_seq", None)
+    return ax
+
+
+def write_cache(cache, k_new: jax.Array, v_new: jax.Array, cur,
+                pos_new: Optional[jax.Array] = None, sinks: int = 0):
+    """Insert [B, S_new, Kv, hd] into the ring at absolute position ``cur``.
+
+    Slot invariant (uniform across batch — the decode engine is
+    synchronous): with ``sinks`` = M reserved slots,
+
+        position p < M  lives at slot p            (permanent sink slots)
+        position p >= M lives at slot M + (p−M) % (L−M)   (ring)
+
+    M = 0 gives the plain ring p % L. Sink slots hold hymba's meta tokens:
+    they are never evicted by the ring — the attention-sink analogue of
+    the paper's coefficient file (small state pinned on-chip while the
+    stream flows through the row buffer). Three static cases:
+      S_new <  L : decode / short prefill — dynamic_update at the slot of
+                   ``cur`` (callers keep chunks non-wrapping).
+      S_new >= L : window prefill — the sink prefix is written to its
+                   reserved slots; of the rest only the last L−M live
+                   tokens are kept (the ring is the paper's row buffer:
+                   storage bounded by the window, not the stream length).
+    ``pos_new``: [S_new] absolute positions (defaults to cur + arange).
+    """
+    L = cache["k"].shape[1]
+    S_new = k_new.shape[1]
+    kd, vd = cache["k"].dtype, cache["v"].dtype
+    quant = kd == jnp.int8
+    if quant:
+        k_new, ks_new = quantize_kv(k_new)
+        v_new, vs_new = quantize_kv(v_new)
+    if pos_new is None:
+        pos_new = jnp.asarray(cur, jnp.int32) + jnp.arange(S_new, jnp.int32)
+    pos_new = pos_new.astype(jnp.int32)
+    M = sinks
+    W = L - M
+
+    def slot_of(p):
+        p = jnp.asarray(p, jnp.int32)
+        if M == 0:
+            return p % L
+        return jnp.where(p < M, p, M + (p - M) % W)
+
+    if S_new < L:
+        start = slot_of(cur)
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(kd), start, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(vd), start, axis=1)
+        pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos_new, start, axis=0)
+        out = {"k": k, "v": v, "pos": pos}
+        if quant:
+            out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks_new, start, axis=1)
+            out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs_new, start, axis=1)
+        return out
+    # eviction write: sinks to reserved slots, ring tail for the rest
+    k_sink, v_sink, p_sink = k_new[:, :M], v_new[:, :M], pos_new[:M]
+    k_t, v_t, p_t = k_new[:, -W:], v_new[:, -W:], pos_new[-W:]
+    first = jnp.asarray(cur, jnp.int32) + (S_new - W)  # abs pos of tail[0]
+    shift = (first - M) % W if M else first % W
+    k_r = jnp.roll(k_t.astype(kd), shift, axis=1)
+    v_r = jnp.roll(v_t.astype(vd), shift, axis=1)
+    pos_r = jnp.roll(p_t, shift, axis=0)
+    k = jnp.concatenate([k_sink.astype(kd), k_r], axis=1)
+    v = jnp.concatenate([v_sink.astype(vd), v_r], axis=1)
+    pos = jnp.concatenate([p_sink, pos_r], axis=0)
+    out = {"k": k, "v": v, "pos": pos}
+    if quant:
+        out["k_scale"] = jnp.concatenate(
+            [ks_new[:, :M], jnp.roll(ks_new[:, -W:], shift, axis=1)], axis=1)
+        out["v_scale"] = jnp.concatenate(
+            [vs_new[:, :M], jnp.roll(vs_new[:, -W:], shift, axis=1)], axis=1)
+    return out
+
+
+def decode_attend(q: jax.Array, cache, num_heads: int, *, window=None,
+                  softcap: float = 0.0, shd=None,
+                  scale: Optional[float] = None, q_pos=None,
+                  sinks: int = 0) -> jax.Array:
+    """One-token attention against the cache. q: [B,1,H,hd].
+
+    The cache sequence dim may be sharded over 'model' (flash-decode): the
+    softmax reduction over a sharded axis makes XLA insert the small
+    max/sum all-reduces; no score plane is ever gathered.
+    """
+    B = q.shape[0]
+    ck, cv = cache["k"], cache["v"]
+    if ck.dtype == jnp.int8:
+        ck = dequantize_kv(ck, cache["k_scale"], q.dtype)
+        cv = dequantize_kv(cv, cache["v_scale"], q.dtype)
+    k = repeat_kv(ck, num_heads)
+    v = repeat_kv(cv, num_heads)
+    kv_pos = jnp.broadcast_to(cache["pos"][None], (B, cache["pos"].shape[0]))
+    if q_pos is None:
+        q_pos = jnp.max(cache["pos"], keepdims=True)[None].repeat(B, 0)
+    if shd is not None:
+        k = shd.constrain(k, "act_batch", "act_kv_seq", "act_heads", None)
+        v = shd.constrain(v, "act_batch", "act_kv_seq", "act_heads", None)
+    return attend(q, k, v, q_pos, kv_pos, causal=True, window=window,
+                  softcap=softcap, shd=shd, q_chunk=0, scale=scale,
+                  sinks=sinks)

@@ -1,0 +1,122 @@
+"""Shared neural net layers (pure functions over ParamSpec-described params)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import p
+
+
+# -- norms -------------------------------------------------------------------
+
+def rms_norm_specs(d: int):
+    return {"scale": p((d,), ("embed",), init="ones")}
+
+
+def rms_norm(x: jax.Array, params, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm_specs(d: int):
+    return {"scale": p((d,), ("embed",), init="ones"),
+            "bias": p((d,), ("embed",), init="zeros")}
+
+
+def layer_norm(x: jax.Array, params, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+# -- gated MLP (SwiGLU) -------------------------------------------------------
+
+def mlp_specs(d: int, f: int):
+    return {
+        "wi": p((d, f), ("embed", "mlp")),
+        "wg": p((d, f), ("embed", "mlp")),
+        "wo": p((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(x: jax.Array, params, shd=None, act=jax.nn.silu) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(x.dtype))
+    h = act(g) * h
+    if shd is not None:
+        h = shd.constrain(h, "act_batch", None, "act_mlp")
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))
+
+
+def mlp2_specs(d: int, f: int):
+    """Ungated 2-matrix MLP (whisper uses GELU MLP)."""
+    return {"wi": p((d, f), ("embed", "mlp")),
+            "bi": p((f,), ("mlp",), init="zeros"),
+            "wo": p((f, d), ("mlp", "embed")),
+            "bo": p((d,), ("embed",), init="zeros")}
+
+
+def mlp2(x: jax.Array, params, shd=None, act=jax.nn.gelu) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+    h = act(h + params["bi"].astype(x.dtype))
+    if shd is not None:
+        h = shd.constrain(h, "act_batch", None, "act_mlp")
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype)) + params["bo"].astype(x.dtype)
+
+
+# -- embedding ----------------------------------------------------------------
+
+def embed_specs(vocab: int, d: int):
+    return {"table": p((vocab, d), ("vocab", "embed"), init="embed")}
+
+
+def embed(tokens: jax.Array, params, dtype=jnp.bfloat16) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(x: jax.Array, params) -> jax.Array:
+    """Logits from hidden states: [.., d] @ [vocab, d]^T."""
+    return jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))
+
+
+def head_specs(d: int, vocab: int):
+    return {"w": p((d, vocab), ("embed", "vocab"))}
+
+
+def lm_head(x: jax.Array, params) -> jax.Array:
+    return jnp.einsum("...d,dv->...v", x, params["w"].astype(x.dtype))
+
+
+# -- depthwise causal conv1d (jnp path; Pallas kernel in kernels/dwconv1d) ----
+
+def dwconv1d_specs(channels: int, k: int):
+    return {"w": p((channels, k), ("ssm_inner", "conv")),
+            "b": p((channels,), ("ssm_inner",), init="zeros")}
+
+
+def dwconv1d(x: jax.Array, params, state: Optional[jax.Array] = None):
+    """Causal depthwise conv. x: [B, S, C]; state: [B, k-1, C] carry or None.
+
+    Returns (y, new_state). The 1D FIR 'transposed form' of the paper: taps
+    accumulated as shifted multiplies, no patch materialisation.
+    """
+    w = params["w"].astype(x.dtype)  # [C, k]
+    k = w.shape[1]
+    B, S, C = x.shape
+    if state is None:
+        state = jnp.zeros((B, k - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # [B, S+k-1, C]
+    y = jnp.zeros_like(x)
+    for i in range(k):  # k is small (4): unrolled shift-MAC chain
+        y = y + xp[:, i:i + S, :] * w[:, i]
+    new_state = xp[:, S:, :] if S >= 1 else state
+    new_state = jax.lax.dynamic_slice_in_dim(xp, xp.shape[1] - (k - 1), k - 1, axis=1)
+    return y + params["b"].astype(x.dtype), new_state

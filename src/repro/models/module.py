@@ -1,0 +1,120 @@
+"""Minimal functional module system: ParamSpec trees + logical axis names.
+
+No flax dependency. A model is described by a nested dict of ``ParamSpec``
+(shape, dtype, logical axes, initializer); ``init_params`` materialises it,
+``abstract_params`` gives ShapeDtypeStructs for dry-runs, and
+``sharding/rules.py`` turns the logical axes into ``NamedSharding``s.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]           # logical axis names, len == ndim
+    init: str = "lecun"                        # lecun | normal | zeros | ones | embed | small
+    dtype: Any = jnp.float32
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def p(shape, axes, init="lecun", dtype=jnp.float32, scale=1.0) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, dtype, scale)
+
+
+# -- tree helpers (nested dicts of ParamSpec / arrays) -----------------------
+
+def tree_paths(tree: Dict, prefix: Tuple[str, ...] = ()) -> Dict[Tuple[str, ...], Any]:
+    out = {}
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            out.update(tree_paths(v, prefix + (k,)))
+        else:
+            out[prefix + (k,)] = v
+    return out
+
+
+def is_spec_leaf(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def map_specs(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec_leaf)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) == 0:
+        return 1
+    if len(shape) == 1:
+        return shape[0]
+    # contraction dims: everything except the last
+    return max(1, math.prod(shape[:-1]))
+
+
+def init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * 0.02 * spec.scale).astype(spec.dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape) * spec.scale).astype(spec.dtype)
+    if spec.init == "small":
+        return (jax.random.normal(key, spec.shape) * 1e-2 * spec.scale).astype(spec.dtype)
+    if spec.init == "lecun":
+        std = spec.scale / math.sqrt(_fan_in(spec.shape))
+        return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(specs, key: jax.Array, dtype: Any = None):
+    """Materialise a ParamSpec tree. Deterministic per-path keys."""
+    flat = tree_paths(specs)
+    out = {}
+    for path, spec in sorted(flat.items()):
+        sub = jax.random.fold_in(key, hash("/".join(path)) % (2 ** 31))
+        leaf = init_leaf(spec, sub)
+        if dtype is not None and jnp.issubdtype(leaf.dtype, jnp.floating):
+            leaf = leaf.astype(dtype)
+        d = out
+        for seg in path[:-1]:
+            d = d.setdefault(seg, {})
+        d[path[-1]] = leaf
+    return out
+
+
+def abstract_params(specs, dtype: Any = None):
+    def mk(s: ParamSpec):
+        dt = dtype if (dtype is not None) else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return map_specs(mk, specs)
+
+
+def param_bytes(specs, bytes_per_el: int = 4) -> int:
+    total = 0
+    for spec in tree_paths(specs).values():
+        total += math.prod(spec.shape) * bytes_per_el
+    return total
+
+
+def count_params(specs) -> int:
+    return sum(math.prod(s.shape) for s in tree_paths(specs).values())
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacked layer dim to every spec (for scan-over-layers)."""
+    def stk(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init,
+                         s.dtype, s.scale)
+    return map_specs(stk, spec_tree)

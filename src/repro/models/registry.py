@@ -1,0 +1,286 @@
+"""Model registry: one uniform bundle per architecture family.
+
+``build(run_config)`` returns a ``ModelBundle`` whose five callables are
+what every higher layer (trainer, server, dry-run, benchmarks, tests)
+programs against:
+
+  init_params(key)                         -> params
+  train_forward(params, batch, shd)        -> (logits, aux_loss)
+  prefill(params, batch, shd)              -> (last_logits, caches)
+  decode_step(params, inp, caches, cur, shd) -> (logits, caches)
+  input_specs(kind)                        -> {name: ShapeDtypeStruct}
+
+Input stand-ins follow the assigned-shape contract: token LMs get int32
+[B, S] tokens (+labels for train); stub-frontend archs (vlm, audio) get
+precomputed embeddings [B, S, D].
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import attention as attn
+from repro.models import module as mod
+from repro.models import transformer as tfm
+from repro.models import whisper as whisper_mod
+
+META = "meta_tokens"
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: RunConfig
+    specs: Any
+    init_params: Callable
+    train_forward: Callable     # (params, batch, shd) -> (logits, aux)
+    loss_fn: Callable           # (params, batch, shd, ...) -> (loss, (aux, denom))
+    prefill: Callable           # (params, batch, shd) -> (logits, caches)
+    decode_step: Callable       # (params, inp, caches, cur, shd) -> (logits, caches)
+    cache_abstract: Callable    # (batch, seq_len) -> abstract cache tree
+    cache_axes: Callable        # () -> logical-axis tree matching caches
+    input_specs: Callable       # (kind) -> dict of ShapeDtypeStruct
+
+
+def _embed_dtype(mc: ModelConfig):
+    return jnp.bfloat16 if mc.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Decoder-LM families (dense / moe / ssm / hybrid / vlm backbone)
+# ---------------------------------------------------------------------------
+
+
+def _lm_bundle(rc: RunConfig) -> ModelBundle:
+    mc = rc.model
+    specs = tfm.model_specs(mc)
+    M = mc.num_meta_tokens
+    dt = _embed_dtype(mc)
+
+    def _with_meta(params, x, positions):
+        """Prepend learnable meta tokens (hymba); shift positions by M."""
+        B = x.shape[0]
+        meta = jnp.broadcast_to(params[META].astype(x.dtype)[None],
+                                (B, M, x.shape[-1]))
+        mpos = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32)[None], (B, M))
+        return (jnp.concatenate([meta, x], axis=1),
+                jnp.concatenate([mpos, positions + M], axis=1))
+
+    def _inputs_to_embeds(params, inputs):
+        if inputs.ndim == 2:
+            from repro.models.layers import embed
+            return embed(inputs, params["embed"], dt)
+        return inputs.astype(dt)
+
+    def train_forward(params, batch, shd=None, remat_policy="none"):
+        inputs = batch["inputs"]
+        B = inputs.shape[0]
+        S = inputs.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        if M:
+            x = _inputs_to_embeds(params, inputs)
+            x, positions = _with_meta(params, x, positions)
+            inputs = x
+        logits, _, aux = tfm.forward(params, inputs, positions, mc, shd=shd,
+                                     remat_policy=remat_policy)
+        if M:
+            logits = logits[:, M:]
+        return logits, aux
+
+    def loss_fn(params, batch, shd=None, remat_policy="none",
+                loss_chunk=2048, z_loss=0.0, aux_weight=0.01):
+        from repro.training.loss import chunked_ce_from_hidden
+        inputs = batch["inputs"]
+        B, S = inputs.shape[0], inputs.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        if M:
+            x = _inputs_to_embeds(params, inputs)
+            x, positions = _with_meta(params, x, positions)
+            inputs = x
+        hidden, _, aux = tfm.forward(params, inputs, positions, mc, shd=shd,
+                                     remat_policy=remat_policy, logits=False)
+        if M:
+            hidden = hidden[:, M:]
+        if mc.tie_embeddings:
+            head_w, tr = params["embed"]["table"], True
+        else:
+            head_w, tr = params["head"]["w"], False
+        loss, denom = chunked_ce_from_hidden(
+            hidden, head_w, batch["labels"], chunk=loss_chunk,
+            z_loss=z_loss, transpose_head=tr, shd=shd)
+        total = loss + aux_weight * aux
+        return total, (aux, denom)
+
+    def prefill(params, batch, shd=None):
+        inputs = batch["inputs"]
+        B, S = inputs.shape[0], inputs.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        if M:
+            x = _inputs_to_embeds(params, inputs)
+            x, positions = _with_meta(params, x, positions)
+            inputs = x
+        caches = tfm.cache_init(mc, B, rc.shape.seq_len + M)
+        # stream-out discipline (the paper's "compute only what leaves the
+        # pipe"): prefill materialises hidden states, not [B,S,V] logits —
+        # only the last position is projected (vocab 152k x 32k seq would
+        # otherwise dominate prefill HBM traffic; found via §Roofline).
+        hidden, caches, _ = tfm.forward(params, inputs, positions, mc,
+                                        shd=shd, caches=caches,
+                                        cur=jnp.asarray(0, jnp.int32),
+                                        logits=False)
+        last = hidden[:, -1:]
+        if mc.tie_embeddings:
+            from repro.models.layers import unembed
+            logits = unembed(last, params["embed"])
+        else:
+            from repro.models.layers import lm_head
+            logits = lm_head(last, params["head"])
+        if shd is not None:
+            logits = shd.constrain(logits, "act_batch", None, "act_vocab")
+        return logits[:, -1], caches
+
+    def decode_step(params, inp, caches, cur, shd=None):
+        """inp: [B,1] token or [B,1,D] embed; cur: absolute position."""
+        B = inp.shape[0]
+        positions = jnp.full((B, 1), cur, jnp.int32)
+        logits, caches, _ = tfm.forward(params, inp, positions, mc, shd=shd,
+                                        caches=caches, cur=cur)
+        return logits[:, -1], caches
+
+    def cache_abstract(batch, seq_len):
+        return tfm.cache_init(mc, batch, seq_len + M, abstract=True)
+
+    def input_specs(kind: str):
+        B, S = rc.shape.global_batch, rc.shape.seq_len
+        if mc.embeddings_in:
+            tok = jax.ShapeDtypeStruct((B, S, mc.d_model), dt)
+            one = jax.ShapeDtypeStruct((B, 1, mc.d_model), dt)
+        else:
+            tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            one = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        if kind == "train":
+            return {"inputs": tok,
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if kind == "prefill":
+            return {"inputs": tok}
+        if kind == "decode":
+            return {"inputs": one}
+        raise ValueError(kind)
+
+    return ModelBundle(
+        cfg=rc, specs=specs,
+        init_params=lambda key, dtype=jnp.float32: mod.init_params(
+            specs, key, dtype),
+        train_forward=train_forward, loss_fn=loss_fn, prefill=prefill,
+        decode_step=decode_step, cache_abstract=cache_abstract,
+        cache_axes=lambda: tfm.cache_logical_axes(mc),
+        input_specs=input_specs)
+
+
+# ---------------------------------------------------------------------------
+# Whisper (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def _whisper_bundle(rc: RunConfig) -> ModelBundle:
+    mc = rc.model
+    specs = whisper_mod.model_specs(mc)
+    dt = _embed_dtype(mc)
+    T_dec = mc.max_target_positions          # decoder length in train cells
+
+    def train_forward(params, batch, shd=None, remat_policy="none"):
+        enc = whisper_mod.encode(params, batch["frames"], mc, shd=shd,
+                                 remat_policy=remat_policy)
+        xkv = whisper_mod.cross_kv(params, enc, mc)
+        B, T = batch["dec_tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                     (B, T))
+        logits, _ = whisper_mod.decode(params, batch["dec_tokens"],
+                                       positions, xkv, mc, shd=shd,
+                                       remat_policy=remat_policy)
+        return logits, jnp.asarray(0.0, jnp.float32)
+
+    def loss_fn(params, batch, shd=None, remat_policy="none",
+                loss_chunk=2048, z_loss=0.0, aux_weight=0.01):
+        from repro.training.loss import ce_loss
+        logits, _ = train_forward(params, batch, shd=shd,
+                                  remat_policy=remat_policy)
+        loss, denom = ce_loss(logits, batch["labels"], z_loss)
+        return loss, (jnp.asarray(0.0, jnp.float32), denom)
+
+    def prefill(params, batch, shd=None):
+        """Encode the audio stream, build cross-KV, prime the decoder."""
+        enc = whisper_mod.encode(params, batch["frames"], mc, shd=shd)
+        xkv = whisper_mod.cross_kv(params, enc, mc)
+        B = batch["frames"].shape[0]
+        sot = batch["dec_tokens"]             # [B, T0] decoder prompt
+        T0 = sot.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(T0, dtype=jnp.int32)[None],
+                                     (B, T0))
+        self_c = whisper_mod.self_cache_init(mc, B)
+        logits, self_c = whisper_mod.decode(
+            params, sot, positions, xkv, mc, self_caches=self_c,
+            cur=jnp.asarray(0, jnp.int32), shd=shd)
+        return logits[:, -1], {"self": self_c, "cross": xkv}
+
+    def decode_step(params, inp, caches, cur, shd=None):
+        B = inp.shape[0]
+        positions = jnp.full((B, 1), cur, jnp.int32)
+        logits, self_c = whisper_mod.decode(
+            params, inp, positions, caches["cross"], mc,
+            self_caches=caches["self"], cur=cur, shd=shd)
+        return logits[:, -1], {"self": self_c, "cross": caches["cross"]}
+
+    def cache_abstract(batch, seq_len):
+        return {"self": whisper_mod.self_cache_init(mc, batch, abstract=True),
+                "cross": whisper_mod.xkv_abstract(mc, batch, seq_len)}
+
+    def cache_axes():
+        kv = {"k": (None, "act_batch", "cache_seq", None, None),
+              "v": (None, "act_batch", "cache_seq", None, None),
+              "pos": (None, "cache_seq")}
+        xpec = {"k": (None, "act_batch", "cache_seq", None, None),
+                "v": (None, "act_batch", "cache_seq", None, None)}
+        return {"self": kv, "cross": xpec}
+
+    def input_specs(kind: str):
+        B, S = rc.shape.global_batch, rc.shape.seq_len
+        frames = jax.ShapeDtypeStruct((B, S, mc.d_model), dt)
+        if kind == "train":
+            return {"frames": frames,
+                    "dec_tokens": jax.ShapeDtypeStruct((B, T_dec), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((B, T_dec), jnp.int32)}
+        if kind == "prefill":
+            return {"frames": frames,
+                    "dec_tokens": jax.ShapeDtypeStruct((B, 8), jnp.int32)}
+        if kind == "decode":
+            return {"inputs": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        raise ValueError(kind)
+
+    return ModelBundle(
+        cfg=rc, specs=specs,
+        init_params=lambda key, dtype=jnp.float32: mod.init_params(
+            specs, key, dtype),
+        train_forward=train_forward, loss_fn=loss_fn, prefill=prefill,
+        decode_step=decode_step, cache_abstract=cache_abstract,
+        cache_axes=cache_axes, input_specs=input_specs)
+
+
+# ---------------------------------------------------------------------------
+
+
+def build(rc: RunConfig) -> ModelBundle:
+    if rc.model.family == "encdec":
+        return _whisper_bundle(rc)
+    if rc.model.family == "filter":
+        raise ValueError("the spatial-filter config is served by repro.core, "
+                         "see examples/video_pipeline.py")
+    return _lm_bundle(rc)

@@ -1,0 +1,66 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head_dim/2 frequency channels into (t, h, w) sections and
+rotates each section by the corresponding positional stream — text tokens use
+identical (t,h,w) ids and reduce exactly to standard RoPE.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """positions: [..., S] int -> cos/sin [..., S, head_dim//2] fp32."""
+    ang = positions[..., None].astype(jnp.float32) * _freqs(head_dim, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                  sections: Tuple[int, ...]) -> Tuple[jax.Array, jax.Array]:
+    """positions: [3, ..., S] (t, h, w streams). sections sum to head_dim//2."""
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = _freqs(head_dim, theta)
+    ang_all = positions[..., None].astype(jnp.float32) * freqs  # [3, ..., S, half]
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # [..., S, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, D]; cos/sin: [B, S, D//2] or [S, D//2] (broadcast)."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    if cos.ndim == 2:  # [S, half] -> broadcast over batch and heads
+        c, s = cos[None, :, None, :], sin[None, :, None, :]
+    else:              # [B, S, half]
+        c, s = cos[:, :, None, :], sin[:, :, None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    return jnp.concatenate([y1, y2], axis=-1).astype(dtype)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """Text-only input: all three streams equal. positions [...,] -> [3, ...]."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+
+def sinusoidal_embedding(length: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings [length, d]."""
+    half = d // 2
+    scale = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None] * scale[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1).astype(dtype)

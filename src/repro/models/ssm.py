@@ -1,0 +1,202 @@
+"""Selective state-space (mamba-2/SSD style) block.
+
+Per-head scalar decay (SSD): the chunked-parallel form turns the linear
+recurrence into chunk-local "decay-masked attention" (all matmuls, MXU
+friendly) plus an O(S/chunk) sequential carry of the [H, dh, N] state —
+the streaming row-buffer idea again: the carried state is the (w−1)-row
+buffer of an infinite-window filter.
+
+Shapes: d_in = expand·d_model, H_m mamba heads, dh = d_in/H_m, state N.
+Decode is the O(1) recurrent step (this is why ssm/hybrid archs run the
+long_500k cell).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import p
+from repro.models.layers import dwconv1d, dwconv1d_specs
+
+
+def mamba_specs(d: int, *, expand: int, heads: int, state: int,
+                conv_width: int):
+    d_in = expand * d
+    return {
+        "in_proj": p((d, 2 * d_in + 2 * state + heads),
+                     ("embed", "ssm_inner")),
+        "conv": dwconv1d_specs(d_in, conv_width),
+        "A_log": p((heads,), (None,), init="zeros"),       # A = -exp(A_log)
+        "dt_bias": p((heads,), (None,), init="zeros"),
+        "D": p((heads,), (None,), init="ones"),
+        "norm": p((d_in,), ("ssm_inner",), init="ones"),
+        "out_proj": p((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(xz: jax.Array, d_in: int, state: int, heads: int):
+    x = xz[..., :d_in]
+    z = xz[..., d_in:2 * d_in]
+    Bmat = xz[..., 2 * d_in:2 * d_in + state]
+    Cmat = xz[..., 2 * d_in + state:2 * d_in + 2 * state]
+    dt = xz[..., 2 * d_in + 2 * state:]
+    return x, z, Bmat, Cmat, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def ssd_body(h, inp):
+    """SSD chunk scan body (top-level for standalone roofline lowering).
+
+    h: [B,H,dh,N] carry; inp: (u, la, B, C) per-chunk slices."""
+    u_, la_, B_, C_ = inp                              # [B,chunk,...]
+    chunk = u_.shape[1]
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]              # s <= t
+    P = jnp.cumsum(la_, axis=1)                        # [B,chunk,H] inclusive
+    # intra-chunk: decay-masked "attention" (entries in (0,1], stable)
+    L = jnp.exp(P[:, :, None, :] - P[:, None, :, :])   # [B,t,s,H]
+    L = jnp.where(causal[None, :, :, None], L, 0.0)
+    G = jnp.einsum("btn,bsn->bts", C_, B_)             # [B,t,s]
+    y_intra = jnp.einsum("bts,btsh,bshd->bthd", G, L, u_)
+    # inter-chunk: carry contribution
+    y_inter = jnp.einsum("btn,bhdn,bth->bthd", C_, h, jnp.exp(P))
+    # state update: h' = exp(P_last) ⊙ h + Σ_s exp(P_last - P_s) B_s ⊗ u_s
+    dec_last = jnp.exp(P[:, -1:, :] - P)               # [B,chunk,H]
+    h_new = (jnp.exp(P[:, -1])[:, :, None, None] * h
+             + jnp.einsum("bsh,bshd,bsn->bhdn", dec_last, u_, B_))
+    return h_new, y_intra + y_inter
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, h0: Optional[jax.Array] = None, *,
+                chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Chunked-parallel selective scan.
+
+    x: [B,S,H,dh]; dt: [B,S,H] (>0); A: [H] (<0); Bm/Cm: [B,S,N].
+    h0: [B,H,dh,N] or None. Returns (y [B,S,H,dh], h_final).
+    """
+    Bb, S, H, dh = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+
+    u = x.astype(f32) * dt.astype(f32)[..., None]          # dt folded into input
+    la = dt.astype(f32) * A.astype(f32)                    # [B,S,H] log-decay <= 0
+
+    uc = u.reshape(Bb, nc, chunk, H, dh).swapaxes(0, 1)
+    lac = la.reshape(Bb, nc, chunk, H).swapaxes(0, 1)
+    Bc = Bm.astype(f32).reshape(Bb, nc, chunk, N).swapaxes(0, 1)
+    Cc = Cm.astype(f32).reshape(Bb, nc, chunk, N).swapaxes(0, 1)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, dh, N), f32)
+
+    h_fin, ys = jax.lax.scan(ssd_body, h0, (uc, lac, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(Bb, S, H, dh)
+    return y.astype(x.dtype), h_fin
+
+
+def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent step. x: [B,H,dh]; dt: [B,H]; Bm/Cm: [B,N];
+    h: [B,H,dh,N]. Returns (y [B,H,dh], h')."""
+    f32 = jnp.float32
+    u = x.astype(f32) * dt.astype(f32)[..., None]
+    dec = jnp.exp(dt.astype(f32) * A.astype(f32))          # [B,H]
+    h = dec[:, :, None, None] * h + jnp.einsum(
+        "bhd,bn->bhdn", u, Bm.astype(f32))
+    y = jnp.einsum("bhdn,bn->bhd", h, Cm.astype(f32))
+    return y.astype(x.dtype), h
+
+
+def mamba_block(x: jax.Array, params, cfg, *, state_in=None, shd=None,
+                chunk: Optional[int] = None, use_pallas_conv: bool = False):
+    """x: [B,S,D]. state_in: None (train) or dict(conv, ssm) for streaming.
+
+    Returns (y [B,S,D], state_out). The conv state is the 1D row buffer;
+    the ssm state is the infinite-window carry.
+    """
+    Bb, S, D = x.shape
+    chunk = chunk if chunk is not None else (cfg.ssd_chunk or 256)
+    # meta tokens etc. may leave S non-divisible: fall back to gcd chunking
+    chunk = min(chunk, S)
+    if S % chunk:
+        import math as _math
+        chunk = _math.gcd(S, chunk)
+        if chunk < 16:
+            chunk = S
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.mamba_heads or max(1, d_in // 64)
+    dh = d_in // H
+    N = cfg.ssm_state
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xs, z, Bmat, Cmat, dt = _split_proj(xz, d_in, N, H)
+    conv_state = None if state_in is None else state_in["conv"]
+    if use_pallas_conv:
+        from repro.kernels.dwconv1d import dwconv1d_pallas
+        xs = dwconv1d_pallas(xs, params["conv"]["w"], params["conv"]["b"])
+        new_conv = None  # pallas path used in training only (no state out)
+        if state_in is not None:
+            raise ValueError("pallas conv path is for stateless training")
+    else:
+        xs, new_conv = dwconv1d(xs, params["conv"], conv_state)
+    xs = jax.nn.silu(xs)
+    if shd is not None:
+        xs = shd.constrain(xs, "act_batch", "act_seq", "act_ssm")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(Bb, S, H, dh)
+    h0 = None if state_in is None else state_in["ssm"]
+    if S == 1 and h0 is not None:  # decode fast path
+        y, h_fin = ssd_step(xh[:, 0], dt[:, 0], A, Bmat[:, 0], Cmat[:, 0], h0)
+        y = y[:, None]
+    else:
+        y, h_fin = ssd_chunked(xh, dt, A, Bmat, Cmat, h0, chunk=chunk)
+    y = y + xh * params["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bb, S, d_in)
+    y = _gated_norm(y, z, params["norm"].astype(jnp.float32))
+    y = y.astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    state_out = {"conv": new_conv, "ssm": h_fin}
+    return out, state_out
+
+
+def _conv_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def mamba_state_abstract(cfg, batch: int):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.mamba_heads or max(1, d_in // 64)
+    dh = d_in // H
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, d_in),
+                                     _conv_dtype(cfg)),
+        "ssm": jax.ShapeDtypeStruct((batch, H, dh, cfg.ssm_state),
+                                    jnp.float32),
+    }
+
+
+def mamba_state_init(cfg, batch: int):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.mamba_heads or max(1, d_in // 64)
+    dh = d_in // H
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_in),
+                          _conv_dtype(cfg)),
+        "ssm": jnp.zeros((batch, H, dh, cfg.ssm_state), jnp.float32),
+    }

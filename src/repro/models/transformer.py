@@ -1,0 +1,488 @@
+"""Decoder LM: stage-partitioned scan-over-layers for heterogeneous stacks.
+
+Layers are grouped into *stages* — maximal runs of contiguous layers with
+identical (kind, attention window, cache length). Each stage's parameters
+are stacked on a leading ``layers`` axis and executed with ``jax.lax.scan``
+(small HLO, fast 512-device compiles); Python iterates the handful of
+stages. This is how gemma3's 5:1 local:global pattern, hymba's
+global/local mix, and xLSTM's mLSTM/sLSTM interleave run without giving
+up scan *or* uniform-cache correctness: each stage owns a cache of exactly
+the length its window needs (a local stage's ring cache is the paper's row
+buffer — only the live window is ever stored).
+
+Kinds: ``dense`` (attn+MLP), ``moe`` (attn+MoE), ``hymba``
+(attn ∥ mamba + MLP), ``mamba``, ``mlstm``, ``slstm``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rope
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (embed_specs, embed, head_specs, lm_head,
+                                 mlp, mlp_specs, rms_norm, rms_norm_specs,
+                                 unembed)
+from repro.models.module import ParamSpec, p, stack_specs
+
+
+# ---------------------------------------------------------------------------
+# Stage partition
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    kind: str                 # dense | moe | hymba | mamba | mlstm | slstm
+    start: int                # first layer index
+    count: int
+    window: int               # 0 = full attention (attn kinds only)
+
+    def cache_len(self, seq_len: int) -> int:
+        if self.window > 0:
+            return min(self.window, seq_len)
+        return seq_len
+
+
+def layer_kind(cfg: ModelConfig, l: int) -> str:
+    if cfg.family == "moe":
+        return "moe"
+    if cfg.family == "hybrid":
+        return "hymba"
+    if cfg.family == "ssm":   # xlstm
+        if cfg.slstm_every and (l % cfg.slstm_every == cfg.slstm_every - 1):
+            return "slstm"
+        return "mlstm"
+    return "dense"
+
+
+def layer_window(cfg: ModelConfig, l: int) -> int:
+    """Effective attention window of layer l (0 = full)."""
+    if cfg.family == "ssm":
+        return 0
+    if cfg.attn_window <= 0:
+        return 0
+    if cfg.global_every and (l % cfg.global_every == cfg.global_every - 1):
+        return 0                                  # periodic global layer
+    if cfg.family == "hybrid":
+        # hymba: global attention at first / middle / last layer
+        if l in (0, cfg.num_layers // 2, cfg.num_layers - 1):
+            return 0
+    return cfg.attn_window
+
+
+def make_stages(cfg: ModelConfig) -> List[Stage]:
+    if cfg.stage_override:
+        out, start = [], 0
+        for kind, win, count in cfg.stage_override:
+            out.append(Stage(kind, start, count, win))
+            start += count
+        return out
+    stages: List[Stage] = []
+    for l in range(cfg.num_layers):
+        kind, win = layer_kind(cfg, l), layer_window(cfg, l)
+        if stages and stages[-1].kind == kind and stages[-1].window == win:
+            s = stages[-1]
+            stages[-1] = Stage(kind, s.start, s.count + 1, win)
+        else:
+            stages.append(Stage(kind, l, 1, win))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# Per-layer specs by kind
+# ---------------------------------------------------------------------------
+
+
+def _attn_mlp_specs(cfg: ModelConfig):
+    hd = cfg.resolved_head_dim()
+    return {
+        "ln1": rms_norm_specs(cfg.d_model),
+        "attn": attn.attn_specs(cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                                hd, cfg.use_qk_norm),
+        "ln2": rms_norm_specs(cfg.d_model),
+    }
+
+
+def layer_specs(cfg: ModelConfig, kind: str):
+    if kind == "dense":
+        s = _attn_mlp_specs(cfg)
+        s["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff)
+        return s
+    if kind == "moe":
+        s = _attn_mlp_specs(cfg)
+        expert_tp = cfg.num_experts < 16 and not cfg.moe_force_ep
+        s["moe"] = moe_mod.moe_specs(cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                                     cfg.num_experts, expert_tp)
+        return s
+    if kind == "hymba":
+        s = _attn_mlp_specs(cfg)
+        s["mamba"] = ssm_mod.mamba_specs(
+            cfg.d_model, expand=cfg.ssm_expand, heads=cfg.mamba_heads,
+            state=cfg.ssm_state, conv_width=cfg.ssm_conv_width)
+        s["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff)
+        return s
+    if kind == "mamba":
+        return {"ln1": rms_norm_specs(cfg.d_model),
+                "mamba": ssm_mod.mamba_specs(
+                    cfg.d_model, expand=cfg.ssm_expand,
+                    heads=cfg.mamba_heads or 8, state=cfg.ssm_state,
+                    conv_width=cfg.ssm_conv_width)}
+    if kind == "mlstm":
+        return {"ln1": rms_norm_specs(cfg.d_model),
+                "mlstm": xlstm_mod.mlstm_specs(
+                    cfg.d_model, heads=cfg.num_heads,
+                    conv_width=cfg.ssm_conv_width)}
+    if kind == "slstm":
+        return {"ln1": rms_norm_specs(cfg.d_model),
+                "slstm": xlstm_mod.slstm_specs(
+                    cfg.d_model, heads=cfg.num_heads,
+                    conv_width=cfg.ssm_conv_width)}
+    raise ValueError(kind)
+
+
+def model_specs(cfg: ModelConfig):
+    specs: Dict[str, Any] = {"embed": embed_specs(cfg.vocab_size, cfg.d_model)}
+    for i, st in enumerate(make_stages(cfg)):
+        specs[f"stage_{i}"] = stack_specs(layer_specs(cfg, st.kind), st.count)
+    specs["final_norm"] = rms_norm_specs(cfg.d_model)
+    if not cfg.tie_embeddings:
+        specs["head"] = head_specs(cfg.d_model, cfg.vocab_size)
+    if cfg.num_meta_tokens:
+        specs["meta_tokens"] = p((cfg.num_meta_tokens, cfg.d_model),
+                                 (None, "embed"), init="embed")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Cache / state trees
+# ---------------------------------------------------------------------------
+
+
+def stage_cache_init(cfg: ModelConfig, st: Stage, batch: int, seq_len: int,
+                     abstract: bool = False):
+    """Per-stage streaming state, stacked over the stage's layers."""
+    hd = cfg.resolved_head_dim()
+    L = st.count
+    cl = st.cache_len(seq_len)
+    if st.window > 0 and cfg.num_meta_tokens:
+        # reserved sink slots: meta tokens never evicted by the ring
+        cl = min(cl + cfg.num_meta_tokens, seq_len)
+    if cfg.kv_cache_dtype == "int8":
+        cdt = jnp.int8
+    else:
+        cdt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def stk(tree):
+        def f(x):
+            if abstract:
+                return jax.ShapeDtypeStruct((L,) + x.shape, x.dtype)
+            return jnp.broadcast_to(x[None], (L,) + x.shape).copy() \
+                if hasattr(x, "shape") else x
+        return jax.tree.map(f, tree)
+
+    if st.kind in ("dense", "moe"):
+        c = (attn.cache_abstract(batch, cl, cfg.num_kv_heads, hd, cdt)
+             if abstract else attn.init_cache(batch, cl, cfg.num_kv_heads,
+                                              hd, cdt))
+        return stk(c) if not abstract else jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), c)
+    if st.kind == "hymba":
+        c = (attn.cache_abstract(batch, cl, cfg.num_kv_heads, hd, cdt)
+             if abstract else attn.init_cache(batch, cl, cfg.num_kv_heads,
+                                              hd, cdt))
+        m = (ssm_mod.mamba_state_abstract(cfg, batch) if abstract
+             else ssm_mod.mamba_state_init(cfg, batch))
+        tree = {"attn": c, "mamba": m}
+        if abstract:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), tree)
+        return stk(tree)
+    if st.kind == "mamba":
+        m = (ssm_mod.mamba_state_abstract(cfg, batch) if abstract
+             else ssm_mod.mamba_state_init(cfg, batch))
+        if abstract:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), m)
+        return stk(m)
+    if st.kind == "mlstm":
+        m = (xlstm_mod.mlstm_state_abstract(cfg, batch) if abstract
+             else xlstm_mod.mlstm_state_init(cfg, batch))
+        if abstract:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), m)
+        return stk(m)
+    if st.kind == "slstm":
+        m = (xlstm_mod.slstm_state_abstract(cfg, batch) if abstract
+             else xlstm_mod.slstm_state_init(cfg, batch))
+        if abstract:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), m)
+        return stk(m)
+    raise ValueError(st.kind)
+
+
+def cache_init(cfg: ModelConfig, batch: int, seq_len: int,
+               abstract: bool = False):
+    return [stage_cache_init(cfg, st, batch, seq_len, abstract)
+            for st in make_stages(cfg)]
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical-axis trees matching cache_init (for decode shardings)."""
+    out = []
+    for st in make_stages(cfg):
+        kv = {"k": (None, "act_batch", "cache_seq", None, None),
+              "v": (None, "act_batch", "cache_seq", None, None),
+              "pos": (None, "cache_seq")}
+        if cfg.kv_cache_dtype == "int8":
+            kv["k_scale"] = (None, "act_batch", "cache_seq", None)
+            kv["v_scale"] = (None, "act_batch", "cache_seq", None)
+        mamba = {"conv": (None, "act_batch", None, "act_ssm"),
+                 "ssm": (None, "act_batch", None, None, None)}
+        if st.kind in ("dense", "moe"):
+            out.append(kv)
+        elif st.kind == "hymba":
+            out.append({"attn": kv, "mamba": mamba})
+        elif st.kind == "mamba":
+            out.append(mamba)
+        elif st.kind == "mlstm":
+            out.append({"conv": (None, "act_batch", None, "act_ssm"),
+                        "mlstm": ((None, "act_batch", None, None, None),
+                                  (None, "act_batch", None, None),
+                                  (None, "act_batch", None))})
+        elif st.kind == "slstm":
+            out.append({"conv": (None, "act_batch", None, None),
+                        "slstm": tuple((None, "act_batch", None)
+                                       for _ in range(4))})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _attention_part(lp, x, pos_cos_sin, q_pos, cfg, shd, window,
+                    cache=None, cur=None, softcap=0.0, sinks=0):
+    """Shared attention sub-block. Returns (attn_out, new_cache)."""
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(h, lp["attn"], cfg.use_qk_norm)
+    cos, sin = pos_cos_sin
+    q = rope.apply_rope(q, cos, sin)
+    k = rope.apply_rope(k, cos, sin)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim())
+    use_kernel = (cfg.use_pallas_attn and cache is None and shd is None
+                  and sinks == 0 and softcap == 0.0
+                  and isinstance(window, int))
+    if use_kernel:
+        # Pallas banded flash attention: the streaming-window kernel keeps
+        # the online-softmax state in VMEM (no S×S score plane in HBM).
+        # Single-device / shard_map contexts only (a pallas_call is not
+        # auto-partitioned by pjit).
+        from repro.kernels.swattn import swattn_pallas
+        o = swattn_pallas(q, k, v, window=window, scale=scale)
+        new_cache = None
+    elif cache is None:
+        kf = attn.repeat_kv(k, cfg.num_heads)
+        vf = attn.repeat_kv(v, cfg.num_heads)
+        o = attn.attend(q, kf, vf, q_pos, q_pos, causal=True, window=window,
+                        softcap=softcap, shd=shd, scale=scale, sinks=sinks,
+                        q_chunk=cfg.q_chunk)
+        new_cache = None
+    else:
+        new_cache = attn.write_cache(cache, k, v, cur, pos_new=q_pos[0],
+                                     sinks=sinks if window is not None
+                                     else 0)
+        if q.shape[1] == 1:
+            o = attn.decode_attend(q, new_cache, cfg.num_heads,
+                                   window=window, softcap=softcap, shd=shd,
+                                   scale=scale, q_pos=q_pos, sinks=sinks)
+        else:  # prefill writes the cache, attends within the chunk
+            kf = attn.repeat_kv(k, cfg.num_heads)
+            vf = attn.repeat_kv(v, cfg.num_heads)
+            o = attn.attend(q, kf, vf, q_pos, q_pos, causal=True,
+                            window=window, softcap=softcap, shd=shd,
+                            scale=scale, sinks=sinks, q_chunk=cfg.q_chunk)
+    return attn.out_project(o, lp["attn"]), new_cache
+
+
+def block_fwd(kind: str, cfg: ModelConfig):
+    """Returns f(lp, x, ctx, cache) -> (x', new_cache, aux)."""
+
+    def _cx(shd, x):
+        return x if shd is None else shd.constrain(
+            x, "act_batch", "act_seq", None)
+
+    def dense(lp, x, ctx, cache):
+        a, nc = _attention_part(lp, x, ctx["cos_sin"], ctx["q_pos"], cfg,
+                                ctx["shd"], ctx["window"], cache,
+                                ctx["cur"], cfg.attn_logit_softcap,
+                                ctx["sinks"])
+        x = _cx(ctx["shd"], x + _cx(ctx["shd"], a))
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = _cx(ctx["shd"], x + _cx(ctx["shd"], mlp(h, lp["mlp"],
+                                                    shd=ctx["shd"])))
+        return x, nc, 0.0
+
+    def moe(lp, x, ctx, cache):
+        a, nc = _attention_part(lp, x, ctx["cos_sin"], ctx["q_pos"], cfg,
+                                ctx["shd"], ctx["window"], cache,
+                                ctx["cur"], cfg.attn_logit_softcap,
+                                ctx["sinks"])
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        B, S, D = h.shape
+        if S == 1:  # decode: route the whole batch as one group
+            y, aux = moe_mod.moe_block(
+                h.reshape(1, B, D), lp["moe"], num_experts=cfg.num_experts,
+                k=cfg.num_experts_per_tok,
+                capacity_factor=cfg.capacity_factor, shd=None)
+            y = y.reshape(B, S, D)
+        else:
+            y, aux = moe_mod.moe_block(
+                h, lp["moe"], num_experts=cfg.num_experts,
+                k=cfg.num_experts_per_tok,
+                capacity_factor=cfg.capacity_factor, shd=ctx["shd"])
+        x = x + y
+        return x, nc, aux
+
+    def hymba(lp, x, ctx, cache):
+        ca = None if cache is None else cache["attn"]
+        cm = None if cache is None else cache["mamba"]
+        a, nca = _attention_part(lp, x, ctx["cos_sin"], ctx["q_pos"], cfg,
+                                 ctx["shd"], ctx["window"], ca, ctx["cur"],
+                                 0.0, ctx["sinks"])
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        m, ncm = ssm_mod.mamba_block(h, lp["mamba"], cfg, state_in=cm,
+                                     shd=ctx["shd"])
+        # parallel heads: mean of per-path normalised outputs
+        x = x + 0.5 * (a + m)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp(h2, lp["mlp"], shd=ctx["shd"])
+        nc = None if cache is None else {"attn": nca, "mamba": ncm}
+        return x, nc, 0.0
+
+    def mamba(lp, x, ctx, cache):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, nc = ssm_mod.mamba_block(h, lp["mamba"], cfg, state_in=cache,
+                                    shd=ctx["shd"])
+        return x + y, nc, 0.0
+
+    def mlstm(lp, x, ctx, cache):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, nc = xlstm_mod.mlstm_block(h, lp["mlstm"], cfg, state_in=cache,
+                                      shd=ctx["shd"])
+        return x + y, nc, 0.0
+
+    def slstm(lp, x, ctx, cache):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, nc = xlstm_mod.slstm_block(h, lp["slstm"], cfg, state_in=cache,
+                                      shd=ctx["shd"])
+        return x + y, nc, 0.0
+
+    return {"dense": dense, "moe": moe, "hymba": hymba, "mamba": mamba,
+            "mlstm": mlstm, "slstm": slstm}[kind]
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _positions_cos_sin(cfg: ModelConfig, positions: jax.Array):
+    hd = cfg.resolved_head_dim()
+    if cfg.mrope_sections:
+        pos3 = rope.text_mrope_positions(positions)
+        return rope.mrope_cos_sin(pos3, hd, cfg.rope_theta,
+                                  cfg.mrope_sections)
+    return rope.rope_cos_sin(positions, hd, cfg.rope_theta)
+
+
+def forward(params, inputs: jax.Array, positions: jax.Array,
+            cfg: ModelConfig, *, shd=None, caches=None, cur=None,
+            remat_policy: str = "none", logits: bool = True):
+    """Run the decoder stack.
+
+    inputs: [B,S] int tokens, or [B,S,D] embeddings (embeddings_in archs).
+    positions: [B,S] absolute positions. caches: list per stage or None.
+    cur: scalar write offset for caches (prefill: 0; decode: position).
+    Returns (logits_or_hidden, new_caches, aux_loss).
+    """
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if inputs.ndim == 2:
+        x = embed(inputs, params["embed"], dtype)
+    else:
+        x = inputs.astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    if shd is not None:
+        x = shd.constrain(x, "act_batch", "act_seq", None)
+
+    cos_sin = _positions_cos_sin(cfg, positions)
+    aux_total = jnp.asarray(0.0, jnp.float32)
+    new_caches = []
+    stages = make_stages(cfg)
+    for i, st in enumerate(stages):
+        blk = block_fwd(st.kind, cfg)
+        sp = params[f"stage_{i}"]
+        cache_s = None if caches is None else caches[i]
+        ctx = {"cos_sin": cos_sin, "q_pos": positions, "shd": shd,
+               "window": st.window, "cur": cur,
+               "sinks": cfg.num_meta_tokens}
+
+        if cache_s is None:
+            def body(carry, lp, _blk=blk, _ctx=ctx):
+                xc, aux = carry
+                xo, _, a = _blk(lp, xc, _ctx, None)
+                return (xo, aux + a), None
+            if remat_policy != "none":
+                body = _remat(body, remat_policy)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), sp)
+            new_caches.append(None)
+        else:
+            def body(carry, xs, _blk=blk, _ctx=ctx):
+                xc, aux = carry
+                lp, cache_l = xs
+                xo, nc, a = _blk(lp, xc, _ctx, cache_l)
+                return (xo, aux + a), nc
+            (x, aux_total), nc_s = jax.lax.scan(body, (x, aux_total),
+                                                (sp, cache_s))
+            new_caches.append(nc_s)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if not logits:
+        return x, new_caches, aux_total
+    if cfg.tie_embeddings:
+        out = unembed(x, params["embed"])
+    else:
+        out = lm_head(x, params["head"])
+    if shd is not None:
+        out = shd.constrain(out, "act_batch", "act_seq", "act_vocab")
+    return out, new_caches, aux_total
+
+
+def hidden_forward(params, inputs, positions, cfg, **kw):
+    return forward(params, inputs, positions, cfg, logits=False, **kw)
+
+
+def _remat(fn, policy: str):
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if policy == "dots_with_no_batch":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(policy)

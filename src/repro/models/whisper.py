@@ -1,0 +1,236 @@
+"""Whisper-style encoder-decoder backbone (conv frontend is a stub).
+
+Encoder: bidirectional self-attention over precomputed frame embeddings
+(the conv1d×2 mel frontend is the paper-assigned STUB — ``input_specs``
+feeds [B, S_enc, D] directly) + sinusoidal positions.
+Decoder: learned positions (448 native; longer targets interpolate — a
+documented deviation needed by decode_32k), causal self-attention with a
+ring cache, cross-attention against encoder states.
+
+Cross-attention KV is computed ONCE at prefill and cached — the encoder
+stream is filtered once and reused, the same read-once discipline as the
+paper's row buffer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import rope
+from repro.models.layers import (embed_specs, embed, layer_norm,
+                                 layer_norm_specs, mlp2, mlp2_specs, unembed)
+from repro.models.module import p, stack_specs
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def _enc_layer_specs(cfg: ModelConfig):
+    hd = cfg.resolved_head_dim()
+    return {
+        "ln1": layer_norm_specs(cfg.d_model),
+        "attn": attn.attn_specs(cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, hd),
+        "ln2": layer_norm_specs(cfg.d_model),
+        "mlp": mlp2_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_layer_specs(cfg: ModelConfig):
+    hd = cfg.resolved_head_dim()
+    return {
+        "ln1": layer_norm_specs(cfg.d_model),
+        "self_attn": attn.attn_specs(cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, hd),
+        "ln_x": layer_norm_specs(cfg.d_model),
+        "cross_attn": attn.attn_specs(cfg.d_model, cfg.num_heads,
+                                      cfg.num_kv_heads, hd),
+        "ln2": layer_norm_specs(cfg.d_model),
+        "mlp": mlp2_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def model_specs(cfg: ModelConfig):
+    return {
+        "embed": embed_specs(cfg.vocab_size, cfg.d_model),   # tied unembed
+        "dec_pos": p((cfg.max_target_positions, cfg.d_model),
+                     (None, "embed"), init="embed"),
+        "encoder": stack_specs(_enc_layer_specs(cfg), cfg.encoder_layers),
+        "enc_ln": layer_norm_specs(cfg.d_model),
+        "decoder": stack_specs(_dec_layer_specs(cfg), cfg.num_layers),
+        "dec_ln": layer_norm_specs(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, *, shd=None,
+           remat_policy: str = "none") -> jax.Array:
+    """frames: [B, S, D] (stub frontend output). Returns encoder states."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    B, S, D = frames.shape
+    x = frames.astype(dtype) + rope.sinusoidal_embedding(S, D, dtype)[None]
+    if shd is not None:
+        x = shd.constrain(x, "act_batch", "act_seq", None)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1"])
+        q, k, v = attn.qkv_project(h, lp["attn"])
+        kf = attn.repeat_kv(k, cfg.num_heads)
+        vf = attn.repeat_kv(v, cfg.num_heads)
+        o = attn.attend(q, kf, vf, pos, pos, causal=False, shd=shd)
+        x = x + attn.out_project(o, lp["attn"])
+        h = layer_norm(x, lp["ln2"])
+        x = x + mlp2(h, lp["mlp"], shd=shd)
+        return x, None
+
+    if remat_policy != "none":
+        from repro.models.transformer import _remat
+        body = _remat(body, remat_policy)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layer_norm(x, params["enc_ln"])
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_positions_embed(params, positions: jax.Array, cfg: ModelConfig,
+                         dtype) -> jax.Array:
+    """Learned positions with linear interpolation beyond the native 448."""
+    table = params["dec_pos"].astype(jnp.float32)      # [P, D]
+    P = table.shape[0]
+    pos = positions.astype(jnp.float32)
+    # map [0, max_needed] into [0, P-1] only when beyond the native range:
+    # native positions index directly; longer sequences scale down.
+    scaled = jnp.where(pos < P, pos, (pos / jnp.maximum(pos.max(), 1.0))
+                       * (P - 1))
+    lo = jnp.floor(scaled).astype(jnp.int32)
+    hi = jnp.minimum(lo + 1, P - 1)
+    frac = (scaled - lo.astype(jnp.float32))[..., None]
+    emb = table[lo] * (1 - frac) + table[hi] * frac
+    return emb.astype(dtype)
+
+
+def cross_kv(params, enc_states: jax.Array, cfg: ModelConfig):
+    """Precompute per-layer cross-attention K/V from encoder states.
+
+    Returns stacked [L, B, S_enc, KV, hd] — the decode-time cross cache.
+    """
+    def body(_, lp):
+        dt = enc_states.dtype
+        k = jnp.einsum("bsd,dhk->bshk", enc_states,
+                       lp["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_states,
+                       lp["cross_attn"]["wv"].astype(dt))
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["decoder"])
+    return {"k": ks, "v": vs}
+
+
+def decode(params, tokens: jax.Array, positions: jax.Array, xkv,
+           cfg: ModelConfig, *, self_caches=None, cur=None, shd=None,
+           remat_policy: str = "none"):
+    """Decoder stack. tokens: [B, T]; xkv: stacked cross K/V.
+
+    self_caches: stacked {k,v,pos} [L, B, C, KV, hd] ring caches or None.
+    Returns (logits, new_self_caches).
+    """
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    B, T = tokens.shape
+    x = embed(tokens, params["embed"], dtype)
+    x = x + _dec_positions_embed(params, positions, cfg, dtype)
+    if shd is not None:
+        x = shd.constrain(x, "act_batch", "act_seq", None)
+    enc_pos_len = xkv["k"].shape[2]
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(enc_pos_len, dtype=jnp.int32)[None], (B, enc_pos_len))
+
+    def body(carry, xs):
+        x = carry
+        if self_caches is None:
+            lp, (xk, xv) = xs
+            cache_l = None
+        else:
+            lp, (xk, xv), cache_l = xs
+        # self attention (causal, ring cache in decode)
+        h = layer_norm(x, lp["ln1"])
+        q, k, v = attn.qkv_project(h, lp["self_attn"])
+        if cache_l is not None:
+            nc = attn.write_cache(cache_l, k, v, cur, pos_new=positions[0])
+            if T == 1:
+                o = attn.decode_attend(q, nc, cfg.num_heads, shd=shd,
+                                       q_pos=positions)
+            else:
+                kf = attn.repeat_kv(k, cfg.num_heads)
+                vf = attn.repeat_kv(v, cfg.num_heads)
+                o = attn.attend(q, kf, vf, positions, positions, causal=True,
+                                shd=shd)
+        else:
+            nc = None
+            kf = attn.repeat_kv(k, cfg.num_heads)
+            vf = attn.repeat_kv(v, cfg.num_heads)
+            o = attn.attend(q, kf, vf, positions, positions, causal=True,
+                            shd=shd)
+        x = x + attn.out_project(o, lp["self_attn"])
+        # cross attention against the encoder cache
+        h = layer_norm(x, lp["ln_x"])
+        dt = h.dtype
+        qx = jnp.einsum("bsd,dhk->bshk", h,
+                        lp["cross_attn"]["wq"].astype(dt))
+        kf = attn.repeat_kv(xk.astype(dt), cfg.num_heads)
+        vf = attn.repeat_kv(xv.astype(dt), cfg.num_heads)
+        ox = attn.attend(qx, kf, vf, positions, enc_pos, causal=False,
+                         shd=shd)
+        x = x + attn.out_project(ox, lp["cross_attn"])
+        h = layer_norm(x, lp["ln2"])
+        x = x + mlp2(h, lp["mlp"], shd=shd)
+        return x, nc
+
+    xs = ((params["decoder"], (xkv["k"], xkv["v"]))
+          if self_caches is None else
+          (params["decoder"], (xkv["k"], xkv["v"]), self_caches))
+    if remat_policy != "none" and self_caches is None:
+        from repro.models.transformer import _remat
+        body = _remat(body, remat_policy)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    x = layer_norm(x, params["dec_ln"])
+    logits = unembed(x, params["embed"])
+    if shd is not None:
+        logits = shd.constrain(logits, "act_batch", "act_seq", "act_vocab")
+    return logits, new_caches
+
+
+def self_cache_init(cfg: ModelConfig, batch: int, abstract: bool = False):
+    hd = cfg.resolved_head_dim()
+    C = cfg.max_target_positions
+    cdt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    mk = attn.cache_abstract if abstract else attn.init_cache
+    c = mk(batch, C, cfg.num_kv_heads, hd, cdt)
+    if abstract:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + s.shape,
+                                           s.dtype), c)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape).copy(), c)
+
+
+def xkv_abstract(cfg: ModelConfig, batch: int, s_enc: int):
+    hd = cfg.resolved_head_dim()
+    sh = (cfg.num_layers, batch, s_enc, cfg.num_kv_heads, hd)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {"k": jax.ShapeDtypeStruct(sh, dt),
+            "v": jax.ShapeDtypeStruct(sh, dt)}

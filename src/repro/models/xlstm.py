@@ -1,0 +1,352 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel/chunkwise) + sLSTM (scalar
+memory, sequential scan) — arXiv:2405.04517.
+
+mLSTM's parallel form is attention-like with an exponential-gating decay
+matrix D[t,s] = exp(Σ log σ(f) + i[s] − m[t]) — another banded/streaming
+structure (the D matrix decays geometrically, so the effective window is
+finite). Recurrent step for decode carries (C [H,dh,dh], n [H,dh], m [H]).
+
+sLSTM is inherently sequential (its point: true recurrence with state
+tracking); implemented as lax.scan over time with per-head state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import p
+from repro.models.layers import dwconv1d, dwconv1d_specs, rms_norm, rms_norm_specs
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(d: int, *, heads: int, pf: float = 2.0, conv_width: int = 4):
+    d_in = int(pf * d)
+    return {
+        "up_proj": p((d, 2 * d_in), ("embed", "ssm_inner")),
+        "conv": dwconv1d_specs(d_in, conv_width),
+        "wq": p((d_in, d_in), ("ssm_inner", None)),
+        "wk": p((d_in, d_in), ("ssm_inner", None)),
+        "wv": p((d_in, d_in), ("ssm_inner", None)),
+        "wi": p((d_in, heads), ("ssm_inner", None), init="small"),
+        "wf": p((d_in, heads), ("ssm_inner", None), init="small"),
+        "wo_gate": p((d_in, d_in), ("ssm_inner", None), init="small"),
+        "norm": p((d_in,), ("ssm_inner",), init="ones"),
+        "down_proj": p((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_g, f_g):
+    """Stabilised fully-parallel mLSTM (reference; O(S²) memory — used for
+    small S and as the chunkwise oracle in tests).
+
+    D[t,s] = exp(cumlogf[t] − cumlogf[s] + i[s] − m[t]), s ≤ t.
+    """
+    B, S, H, dh = q.shape
+    f32 = jnp.float32
+    logf = jax.nn.log_sigmoid(f_g.astype(f32))              # [B,S,H]
+    cf = jnp.cumsum(logf, axis=1)
+    idx = jnp.arange(S)
+    causal = (idx[:, None] >= idx[None, :])[None, :, :, None]
+    # logD[t,s] = (cumf[t] − cumf[s]) + i[s]  for s ≤ t
+    logD = jnp.where(causal,
+                     cf[:, :, None, :] - cf[:, None, :, :]
+                     + i_g.astype(f32)[:, None, :, :],
+                     NEG_INF)
+    m = jnp.max(logD, axis=2, keepdims=True)                 # [B,t,1,H]
+    D = jnp.exp(logD - m)                                    # stabilised
+    scale = 1.0 / math.sqrt(dh)
+    s_qk = jnp.einsum("bthd,bshd->btsh", q.astype(f32), k.astype(f32)) * scale
+    w = s_qk * D
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2, keepdims=True)),
+                       jnp.exp(-m))                          # [B,t,1,H]
+    w = w / norm
+    y = jnp.einsum("btsh,bshd->bthd", w, v.astype(f32))
+    return y.astype(q.dtype)
+
+
+def mlstm_chunk_body(carry, inp):
+    """Chunkwise-parallel mLSTM scan body (top-level so the roofline tool
+    can lower it standalone and multiply by the trip count).
+
+    carry: (C [B,H,dk,dv], n [B,H,dk], m [B,H]) — running matrix memory in
+    the *stabilised* domain: C/n carry an implicit exp(-m) factor.
+    inp: (q,k,v [B,c,H,dh], logf, i_g [B,c,H]).
+
+    Intra-chunk: the parallel D-masked form. Inter-chunk: q reads the
+    carried memory decayed through the chunk prefix. This is the streaming
+    row-buffer structure once more: state = everything older than the
+    current strip.
+    """
+    C, n, m = carry
+    q, k, v, logf, i_g = inp
+    f32 = jnp.float32
+    B, c, H, dh = q.shape
+    # k pre-scaled at insertion (matches _mlstm_step, so states interchange)
+    q, v = q.astype(f32), v.astype(f32)
+    k = k.astype(f32) / math.sqrt(dh)
+
+    cf = jnp.cumsum(logf, axis=1)                        # [B,c,H] inclusive
+    # stabiliser per position: max over (intra candidates, carry candidate)
+    idx = jnp.arange(c)
+    causal = (idx[:, None] >= idx[None, :])[None, :, :, None]
+    logD = jnp.where(causal,
+                     cf[:, :, None, :] - cf[:, None, :, :]
+                     + i_g[:, None, :, :], NEG_INF)      # [B,t,s,H]
+    m_intra = jnp.max(logD, axis=2)                      # [B,t,H]
+    m_carry = cf + m[:, None, :]                         # decayed carry max
+    m_t = jnp.maximum(m_intra, m_carry)                  # [B,t,H]
+
+    D = jnp.exp(logD - m_t[:, :, None, :])
+    s_qk = jnp.einsum("bthd,bshd->btsh", q, k)
+    w_intra = s_qk * D
+    dec_q = jnp.exp(m_carry - m_t)                       # [B,t,H]
+    num = (jnp.einsum("btsh,bshd->bthd", w_intra, v)
+           + jnp.einsum("bthd,bhde,bth->bthe", q, C, dec_q))
+    den = (jnp.sum(w_intra, axis=2)
+           + jnp.einsum("bthd,bhd,bth->bth", q, n, dec_q))
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    y = num / den[..., None]
+
+    # carry update to end of chunk: decay old memory by exp(cf_last),
+    # insert chunk keys decayed to the chunk end, restabilised at m_new
+    cf_last = cf[:, -1, :]                               # [B,H]
+    m_new = jnp.maximum(cf_last + m, jnp.max(cf_last[:, None] - cf + i_g,
+                                             axis=1))
+    dec_c = jnp.exp(cf_last + m - m_new)                 # [B,H]
+    ins = jnp.exp(cf_last[:, None] - cf + i_g - m_new[:, None])  # [B,c,H]
+    C = (dec_c[:, :, None, None] * C
+         + jnp.einsum("bsh,bshd,bshe->bhde", ins, k, v))
+    n = dec_c[:, :, None] * n + jnp.einsum("bsh,bshd->bhd", ins, k)
+    return (C, n, m_new), y.astype(jnp.float32)
+
+
+def mlstm_chunkwise(q, k, v, i_g, f_g, *, chunk: int = 256, state=None):
+    """Chunked mLSTM: O(S·c) memory. Returns (y, final_state)."""
+    B, S, H, dh = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+    logf = jax.nn.log_sigmoid(f_g.astype(f32))
+    i_gf = i_g.astype(f32)
+    if state is None:
+        state = (jnp.zeros((B, H, dh, dh), f32), jnp.zeros((B, H, dh), f32),
+                 jnp.full((B, H), NEG_INF, f32))
+
+    def split(x):
+        return x.reshape((B, nc, chunk) + x.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(split(t) for t in (q, k, v, logf, i_gf))
+    fin, ys = jax.lax.scan(mlstm_chunk_body, state, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, dh)
+    return y.astype(q.dtype), fin
+
+
+def _mlstm_step(q, k, v, i_g, f_g, state):
+    """Recurrent step. q,k,v: [B,H,dh]; i_g,f_g: [B,H];
+    state = (C [B,H,dh,dh], n [B,H,dh], m [B,H])."""
+    C, n, m = state
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    dh = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_g.astype(f32))
+    i = i_g.astype(f32)
+    m_new = jnp.maximum(logf + m, i)
+    f_act = jnp.exp(logf + m - m_new)
+    i_act = jnp.exp(i - m_new)
+    k = k / math.sqrt(dh)
+    C = f_act[..., None, None] * C + i_act[..., None, None] * (
+        k[..., :, None] * v[..., None, :])                  # [B,H,dh_k,dh_v]
+    n = f_act[..., None] * n + i_act[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))
+    y = num / den[..., None]
+    return y, (C, n, m_new)
+
+
+def mlstm_block(x: jax.Array, params, cfg, *, state_in=None, shd=None):
+    """mLSTM residual block. x: [B,S,D] -> (y, state_out)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"].astype(x.dtype))
+    d_in = up.shape[-1] // 2
+    xm, z = up[..., :d_in], up[..., d_in:]
+    conv_state = None if state_in is None else state_in["conv"]
+    xc, new_conv = dwconv1d(xm, params["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+    if shd is not None:
+        xc = shd.constrain(xc, "act_batch", "act_seq", "act_ssm")
+    dh = d_in // H
+    dt = x.dtype
+
+    def heads(w, src):
+        return jnp.einsum("bse,ef->bsf", src, w.astype(dt)).reshape(B, S, H, dh)
+
+    q = heads(params["wq"], xc)
+    k = heads(params["wk"], xc)
+    v = heads(params["wv"], xm)    # values from the non-conv path
+    i_g = jnp.einsum("bse,eh->bsh", xc, params["wi"].astype(dt))
+    f_g = jnp.einsum("bse,eh->bsh", xc, params["wf"].astype(dt))
+
+    if S == 1 and state_in is not None:
+        y, new_m = _mlstm_step(q[:, 0], k[:, 0], v[:, 0], i_g[:, 0],
+                               f_g[:, 0], state_in["mlstm"])
+        y = y[:, None]
+    else:
+        chunk = 256 if S % 256 == 0 else (math.gcd(S, 256) or S)
+        if chunk < 16:
+            chunk = S
+        y, fin = mlstm_chunkwise(
+            q, k, v, i_g, f_g, chunk=min(chunk, S),
+            state=None if state_in is None else state_in["mlstm"])
+        new_m = fin if state_in is not None else None
+    y = y.reshape(B, S, d_in)
+    # gated output + norm, down-projection
+    o = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", xm,
+                                  params["wo_gate"].astype(dt)))
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6)
+         * params["norm"].astype(jnp.float32)).astype(dt) * o
+    out = jnp.einsum("bse,ed->bsd", y, params["down_proj"].astype(dt))
+    return out, {"conv": new_conv, "mlstm": new_m}
+
+
+def mlstm_state_init(cfg, batch: int):
+    d_in = int(2.0 * cfg.d_model)
+    H = cfg.num_heads
+    dh = d_in // H
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_in),
+                          jnp.bfloat16 if cfg.dtype == "bfloat16"
+                          else jnp.float32),
+        "mlstm": (jnp.zeros((batch, H, dh, dh), jnp.float32),
+                  jnp.zeros((batch, H, dh), jnp.float32),
+                  jnp.full((batch, H), NEG_INF, jnp.float32)),
+    }
+
+
+def mlstm_state_abstract(cfg, batch: int):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        mlstm_state_init(cfg, batch))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(d: int, *, heads: int, conv_width: int = 4):
+    return {
+        "conv": dwconv1d_specs(d, conv_width),
+        # i, f, z, o gates each get recurrent + input weights (block-diag
+        # per head for the recurrent part)
+        "w_in": p((d, 4 * d), ("embed", "ssm_inner")),
+        "r": p((heads, 4, d // heads, d // heads), (None, None, None, None),
+               init="small"),
+        "b": p((4 * d,), ("ssm_inner",), init="zeros"),
+        "norm": p((d,), ("embed",), init="ones"),
+        "ffn": {
+            "wi": p((d, int(d * 4 / 3) // 2 * 2), ("embed", "mlp")),
+            "wg": p((d, int(d * 4 / 3) // 2 * 2), ("embed", "mlp")),
+            "wo": p((int(d * 4 / 3) // 2 * 2, d), ("mlp", "embed")),
+        },
+    }
+
+
+def slstm_step(carry, g_t, r, b, heads: int):
+    """One sLSTM time step (top-level for standalone roofline lowering).
+
+    carry: (c, n, h, m) each [B, d]; g_t: [B, 4d] input gate pre-acts."""
+    f32 = jnp.float32
+    c, n, h, m = carry
+    B, d = c.shape
+    dh = d // heads
+    hh = h.reshape(B, heads, dh)
+    rec = jnp.einsum("bhk,hgkl->bhgl", hh, r.astype(f32))  # [B,H,4,dh]
+    rec = rec.transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    z_all = g_t.astype(f32) + rec + b.astype(f32)
+    zi, zf, zz, zo = jnp.split(z_all, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(log_f + m, zi)
+    i_act = jnp.exp(zi - m_new)
+    f_act = jnp.exp(log_f + m - m_new)
+    c_new = f_act * c + i_act * jnp.tanh(zz)
+    n_new = f_act * n + i_act
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_scan(gates_in: jax.Array, r: jax.Array, b: jax.Array, heads: int,
+               state=None):
+    """Sequential sLSTM. gates_in: [B,S,4d] pre-activations from the input.
+
+    Per-head recurrent contribution uses last hidden state. state:
+    (c, n, h, m) each [B, d] (+m [B, heads]).
+    """
+    B, S, d4 = gates_in.shape
+    d = d4 // 4
+    dh = d // heads
+    f32 = jnp.float32
+
+    if state is None:
+        c0 = jnp.zeros((B, d), f32)
+        n0 = jnp.ones((B, d), f32)
+        h0 = jnp.zeros((B, d), f32)
+        m0 = jnp.zeros((B, d), f32)
+    else:
+        c0, n0, h0, m0 = state
+
+    (c, n, h, m), hs = jax.lax.scan(
+        lambda carry, g_t: slstm_step(carry, g_t, r, b, heads),
+        (c0, n0, h0, m0), gates_in.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), (c, n, h, m)
+
+
+def slstm_block(x: jax.Array, params, cfg, *, state_in=None, shd=None):
+    """sLSTM residual block (conv + scan + FFN). x: [B,S,D]."""
+    from repro.models.layers import mlp
+    B, S, D = x.shape
+    heads = cfg.num_heads
+    conv_state = None if state_in is None else state_in["conv"]
+    xc, new_conv = dwconv1d(x, params["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+    gates = jnp.einsum("bsd,de->bse", xc, params["w_in"].astype(x.dtype))
+    st = None if state_in is None else state_in["slstm"]
+    hs, new_state = slstm_scan(gates, params["r"], params["b"], heads, st)
+    hs = hs.astype(x.dtype)
+    yf = hs.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6)
+         * params["norm"].astype(jnp.float32)).astype(x.dtype)
+    y = y + mlp(y, params["ffn"], shd=shd)
+    return y, {"conv": new_conv, "slstm": new_state}
+
+
+def slstm_state_init(cfg, batch: int):
+    d = cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d),
+                          jnp.bfloat16 if cfg.dtype == "bfloat16"
+                          else jnp.float32),
+        "slstm": (jnp.zeros((batch, d), jnp.float32),
+                  jnp.ones((batch, d), jnp.float32),
+                  jnp.zeros((batch, d), jnp.float32),
+                  jnp.zeros((batch, d), jnp.float32)),
+    }
+
+
+def slstm_state_abstract(cfg, batch: int):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        slstm_state_init(cfg, batch))

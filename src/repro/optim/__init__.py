@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               adamw_abstract, opt_state_axes)
+from repro.optim.schedule import cosine_warmup
+from repro.optim.clip import global_norm, clip_by_global_norm
+from repro.optim.compression import int8_ef_compress, int8_ef_decompress

@@ -1,0 +1,65 @@
+"""AdamW, dependency-free (no optax). State is a plain pytree so the
+checkpoint layer and sharding rules treat it like parameters (FSDP shards
+m/v exactly as the weight they belong to — ZeRO style)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as mod
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    m: Any                   # pytree like params
+    v: Any                   # pytree like params
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.zeros_like, params))
+
+
+def adamw_abstract(specs, dtype=jnp.float32) -> AdamWState:
+    ab = mod.abstract_params(specs, dtype)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), m=ab, v=ab)
+
+
+def opt_state_axes(specs) -> AdamWState:
+    """Logical axes for the state tree (same as params; step unsharded)."""
+    ax = mod.map_specs(lambda s: s.axes, specs)
+    return AdamWState(step=(), m=ax, v=ax)
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    """One AdamW step. ``lr`` may be traced (schedule value)."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p_, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * (g * g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p_.astype(jnp.float32)
+        return (p_ - lr * delta).astype(p_.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p_, g, m, v) for p_, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

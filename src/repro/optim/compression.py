@@ -1,0 +1,45 @@
+"""int8 error-feedback gradient compression for the slow cross-pod axis.
+
+At 512+ chips the pod-to-pod (DCN) axis is the thin pipe: the data-parallel
+all-reduce over 'pod' moves full fp32 gradients. We compress 4x by
+quantising to int8 with a per-tensor scale BEFORE the pod reduction and
+carry the quantisation residual into the next step (error feedback keeps
+the scheme unbiased in the long run — standard EF-SGD/EF21 argument).
+
+The intra-pod ('data') reduction stays fp32: ICI is fast, and reducing
+first over 'data' shrinks what crosses the DCN by |data| in count terms.
+Integration: training.train_step reduces grads over 'data' via psum, then
+applies compress -> psum('pod') -> decompress.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_ef_compress(g: jax.Array, err: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantise g+err to int8. Returns (q, scale, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def int8_ef_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, errs):
+    """Tree-mapped compress: returns (q_tree, scale_tree, err_tree)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errs)
+    qs, ss, es = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = int8_ef_compress(g, e)
+        qs.append(q); ss.append(s); es.append(ne)
+    return (jax.tree.unflatten(tdef, qs), jax.tree.unflatten(tdef, ss),
+            jax.tree.unflatten(tdef, es))

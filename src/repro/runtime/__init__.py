@@ -1,0 +1,2 @@
+from repro.runtime.fault import (StepWatchdog, PreemptionGuard,
+                                 retry_transient)

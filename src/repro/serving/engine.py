@@ -1,0 +1,130 @@
+"""Batched serving engine: prefill + synchronous decode steps over a fixed
+batch of slots (static shapes => one compiled decode executable).
+
+The engine is the serving analogue of the paper's control unit: it primes
+(prefill), streams (decode, one token per step per slot, never stalling
+the compiled step), and flushes (returns finished slots to the pool). The
+KV cache is the row buffer: a ring bounded by the window for local layers.
+
+Scheduling: FIFO with length bucketing — a wave admits up to B requests
+of the SAME prompt length (positions are shared across the batch row in
+the synchronous engine, so mixed lengths would attend padding; production
+engines solve this with per-row position tensors, here bucketing keeps
+the compiled step shape-stable AND correct). Slots finish on EOS or
+max_tokens; a new wave is admitted when the current one drains.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.models import registry
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Synchronous batched engine. Batch size fixed at rc.shape.global_batch
+    (grouped-admission continuous batching: a new wave is admitted whenever
+    all current slots finish; production would swap per-slot caches)."""
+
+    def __init__(self, rc: RunConfig, params=None, shd=None):
+        self.rc = rc
+        self.bundle = registry.build(rc)
+        self.params = params if params is not None else \
+            self.bundle.init_params(jax.random.key(rc.train.seed))
+        self.shd = shd
+        self.queue: deque[Request] = deque()
+        self.active: List[Request] = []
+        self.caches = None
+        self.cur = 0
+        self._prefill = jax.jit(
+            lambda p, b: self.bundle.prefill(p, b, shd=shd))
+        self._decode = jax.jit(
+            lambda p, t, c, cur: self.bundle.decode_step(p, t, c, cur,
+                                                         shd=shd))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit_wave(self):
+        B = self.rc.shape.global_batch
+        if not self.queue:
+            return False
+        # length bucket: admit the head-of-line length class
+        L0 = len(self.queue[0].prompt)
+        wave, rest = [], deque()
+        while self.queue and len(wave) < B:
+            r = self.queue.popleft()
+            if len(r.prompt) == L0:
+                wave.append(r)
+            else:
+                rest.append(r)
+        while self.queue:
+            rest.append(self.queue.popleft())
+        self.queue = rest
+        S = max(L0, 2)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, S - len(r.prompt):] = r.prompt
+        logits, caches = self._prefill(self.params, {"inputs":
+                                                     jnp.asarray(toks)})
+        self.caches = caches
+        self.active = wave
+        self.cur = S + self.rc.model.num_meta_tokens
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i, r in enumerate(wave):
+            r.out_tokens.append(int(nxt[i]))
+        self._last = nxt
+        return True
+
+    def _decode_wave(self):
+        B = self.rc.shape.global_batch
+        steps = max(r.max_new_tokens for r in self.active) - 1
+        for _ in range(max(steps, 0)):
+            tok = np.zeros((B, 1), np.int32)
+            for i, r in enumerate(self.active):
+                tok[i, 0] = r.out_tokens[-1]
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(tok), self.caches,
+                jnp.asarray(self.cur, jnp.int32))
+            self.cur += 1
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            alldone = True
+            for i, r in enumerate(self.active):
+                if r.done or len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    continue
+                t = int(nxt[i])
+                r.out_tokens.append(t)
+                if r.eos_id is not None and t == r.eos_id:
+                    r.done = True
+                alldone = alldone and r.done
+            if alldone:
+                break
+        for r in self.active:
+            r.done = True
+
+    def run(self) -> List[Request]:
+        """Drain the queue; returns all completed requests."""
+        done: List[Request] = []
+        while self.queue:
+            if self._admit_wave():
+                self._decode_wave()
+                done.extend(self.active)
+                self.active = []
+        return done

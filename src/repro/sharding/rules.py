@@ -1,0 +1,207 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+A profile maps logical axis names (used in ParamSpec.axes and activation
+constraints) to mesh axis names. Rules are resolved against concrete shapes:
+a mapping is silently dropped when the dim is not divisible by the mesh axis
+size (recorded in ``dropped`` for diagnostics) — this is what lets one model
+definition serve every (arch x shape x mesh) cell.
+
+Profiles:
+  train   — TP over 'model' (heads or kv-seq per arch), DP over pod+data,
+            FSDP ('data') on the weight 'embed'/'vocab' dims.
+  decode  — KV cache sharded over sequence ('model', flash-decode style);
+            batch over pod+data when divisible, else sequence over data too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import module as mod
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Weight dims
+W_RULES = {
+    "vocab": "model",
+    "embed": "data",        # FSDP shard of the non-TP weight dim
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": "model",
+    "expert_mlp": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,
+    "stage": None,
+}
+
+# Activation dims
+A_RULES = {
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_kv_seq": None,      # 'model' in kv_seq attention / decode profiles
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_experts": "model",
+    "act_ssm": "model",      # mamba/xlstm inner dim
+    "cache_seq": "model",    # decode: sequence-sharded KV cache
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Resolves logical axes to PartitionSpecs/NamedShardings for one mesh."""
+
+    mesh: Optional[Mesh]
+    rules: Dict[str, MeshAxes]
+    dropped: list = dataclasses.field(default_factory=list)
+
+    # -- resolution ---------------------------------------------------------
+    def _axis_size(self, names: MeshAxes) -> int:
+        if names is None or self.mesh is None:
+            return 1
+        if isinstance(names, str):
+            names = (names,)
+        size = 1
+        for n in names:
+            size *= dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(n, 1)
+        return size
+
+    def _mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        axes = self.rules.get(logical)
+        if axes is None or self.mesh is None:
+            return None
+        if isinstance(axes, str):
+            axes = (axes,)
+        present = tuple(a for a in axes if a in self.mesh.axis_names)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+
+    def pspec(self, shape: Sequence[int], axes: Sequence[Optional[str]]) -> P:
+        entries = []
+        used = set()
+        for dim, logical in zip(shape, axes):
+            m = self._mesh_axes(logical)
+            if m is None:
+                entries.append(None)
+                continue
+            key = (m,) if isinstance(m, str) else tuple(m)
+            if used & set(key):  # a mesh axis may appear once per spec
+                entries.append(None)
+                continue
+            if dim % self._axis_size(m) != 0:
+                self.dropped.append((tuple(shape), logical, m))
+                entries.append(None)
+                continue
+            entries.append(m)
+            used |= set(key)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, shape, axes) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(shape, axes))
+
+    # -- application --------------------------------------------------------
+    def constrain(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        """with_sharding_constraint by logical axes; no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        assert len(axes) == x.ndim, (x.shape, axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.pspec(x.shape, axes)))
+
+    def spec_tree_shardings(self, specs):
+        """NamedSharding tree for a ParamSpec tree (None without a mesh)."""
+        return mod.map_specs(lambda s: self.sharding(s.shape, s.axes), specs)
+
+    def spec_tree_pspecs(self, specs):
+        return mod.map_specs(lambda s: self.pspec(s.shape, s.axes), specs)
+
+
+def make_rules(profile: str = "train",
+               overrides: Sequence[Tuple[str, MeshAxes]] = ()) -> Dict[str, MeshAxes]:
+    rules = dict(W_RULES)
+    rules.update(A_RULES)
+    if profile == "decode":
+        rules["act_kv_seq"] = "model"
+        rules["act_heads"] = None        # flash-decode: heads replicated
+        rules["act_mlp"] = "model"
+    elif profile == "dp_only":
+        # small-model regime: TP of a 350M model over 16 ranks moves more
+        # activation bytes than it saves compute. Fold 'model' into the
+        # batch: 256-way DP, weights replicated, the only collective left
+        # is the gradient all-reduce (params ≪ activations here).
+        for k in ("embed", "mlp", "heads", "kv_heads", "ssm_inner",
+                  "vocab", "experts"):
+            rules[k] = None
+        rules["act_batch"] = ("pod", "data", "model")
+        for k in ("act_heads", "act_mlp", "act_vocab", "act_ssm",
+                  "act_experts"):
+            rules[k] = None
+    elif profile == "zero1":
+        # ZeRO-1: weights replicated over 'data' (kills the batch<->feature
+        # reshard collectives that contraction-dim FSDP provokes); only the
+        # optimizer moments stay data-sharded (build_lowered gives m/v the
+        # FSDP rules), so XLA reduce-scatters grads into the moment shards
+        # and all-gathers the updated params — the ZeRO-1 schedule.
+        rules["embed"] = None
+    elif profile == "train_sp":
+        # sequence parallelism: residual stream sharded over 'model' on seq
+        # between the TP blocks (Megatron SP): the TP all-reduce of the
+        # residual becomes reduce-scatter + all-gather in bf16, and norms /
+        # residual adds see S/|model| tokens per device.
+        rules["act_seq"] = "model"
+    elif profile == "kv_seq":
+        # context parallelism: scores sharded over the KV-sequence dim —
+        # works for ANY head count (28 heads % 16 devices != 0 drops the TP
+        # mapping and replicates the S×S score plane otherwise). Softmax
+        # over the sharded axis makes XLA insert the flash-style max/sum
+        # all-reduces. Weights keep their TP sharding (gathers are small).
+        rules["act_kv_seq"] = "model"
+        rules["act_heads"] = None
+    elif profile != "train":
+        raise ValueError(profile)
+    for k, v in overrides:
+        rules[k] = v
+    return rules
+
+
+# Overrides for the (data, expert, model) MoE mesh: TP spans both sub-axes
+# for dense ops; experts shard over 'expert'.
+EP_OVERRIDES = (
+    ("experts", "expert"),
+    ("expert_mlp", "model"),
+    ("mlp", ("expert", "model")),
+    ("heads", ("expert", "model")),
+    ("kv_heads", ("expert", "model")),
+    ("vocab", ("expert", "model")),
+    ("act_heads", ("expert", "model")),
+    ("act_mlp", ("expert", "model")),
+    ("act_vocab", ("expert", "model")),
+    ("act_experts", "expert"),
+    ("act_ssm", ("expert", "model")),
+    ("cache_seq", ("expert", "model")),
+)
+
+
+def make_ctx(mesh: Optional[Mesh], profile: str = "train",
+             overrides: Sequence[Tuple[str, MeshAxes]] = ()) -> ShardingCtx:
+    return ShardingCtx(mesh=mesh, rules=make_rules(profile, overrides))
+
+
+def null_ctx() -> ShardingCtx:
+    return ShardingCtx(mesh=None, rules=make_rules("train"))

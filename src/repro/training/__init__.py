@@ -1,0 +1,2 @@
+from repro.training.loss import ce_loss, chunked_ce_from_hidden
+from repro.training.step import make_train_step

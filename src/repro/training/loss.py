@@ -1,0 +1,76 @@
+"""Cross-entropy losses.
+
+``chunked_ce_from_hidden`` is the production path for large vocabularies
+(gemma3: 262k): the head projection and log-softmax run per sequence chunk
+inside a scan, so the full [B, S, V] fp32 logit plane never exists — the
+same no-full-frame-buffering discipline as the paper's row buffer, applied
+to the loss.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -100
+
+
+def _ce_terms(logits: jax.Array, labels: jax.Array, z_loss: float):
+    """Per-token CE (+z-loss). logits [*, V] fp32; labels [*] int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None].clip(0),
+                              axis=-1)[..., 0]
+    ce = lse - tgt
+    if z_loss > 0.0:
+        ce = ce + z_loss * jnp.square(lse)
+    mask = (labels != IGNORE).astype(jnp.float32)
+    return ce * mask, mask
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array, z_loss: float = 0.0
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE over non-ignored tokens. Returns (loss, denom)."""
+    ce, mask = _ce_terms(logits, labels, z_loss)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(ce) / denom, denom
+
+
+def chunked_ce_from_hidden(hidden: jax.Array, head_w: jax.Array,
+                           labels: jax.Array, *, chunk: int = 2048,
+                           z_loss: float = 0.0, transpose_head: bool = False,
+                           shd=None) -> Tuple[jax.Array, jax.Array]:
+    """hidden [B,S,D] @ head -> CE against labels [B,S], chunked over S.
+
+    head_w: [D, V] (or [V, D] with transpose_head=True — tied embeddings).
+    """
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk != 0:                       # fall back: rare, test shapes
+        logits = _project(hidden, head_w, transpose_head)
+        return ce_loss(logits, labels, z_loss)
+    n = S // chunk
+    hc = hidden.reshape(B, n, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(acc, xs):
+        h, l = xs
+        logits = _project(h, head_w, transpose_head)
+        if shd is not None:
+            logits = shd.constrain(logits, "act_batch", "act_seq",
+                                   "act_vocab")
+        ce, mask = _ce_terms(logits, l, z_loss)
+        return (acc[0] + jnp.sum(ce), acc[1] + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    denom = jnp.maximum(cnt, 1.0)
+    return tot / denom, denom
+
+
+def _project(h: jax.Array, w: jax.Array, transpose: bool) -> jax.Array:
+    if transpose:      # tied embedding table [V, D]
+        return jnp.einsum("...d,vd->...v", h, w.astype(h.dtype))
+    return jnp.einsum("...d,dv->...v", h, w.astype(h.dtype))

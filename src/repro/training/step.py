@@ -1,0 +1,70 @@
+"""train_step factory: grad accumulation, clipping, schedule, AdamW.
+
+The returned function is pure (params, opt_state, batch, step) ->
+(params, opt_state, metrics): ready for jax.jit with in/out shardings from
+``sharding/rules``. Gradient accumulation runs as a scan over microbatches
+so the HLO stays one loop regardless of the accumulation factor.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.optim import (adamw_update, clip_by_global_norm, cosine_warmup,
+                         global_norm)
+
+
+def make_train_step(bundle, rc: RunConfig, shd=None) -> Callable:
+    tc = rc.train
+
+    def loss_for(params, batch):
+        return bundle.loss_fn(params, batch, shd=shd,
+                              remat_policy=tc.remat_policy,
+                              loss_chunk=tc.loss_chunk, z_loss=tc.z_loss)
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def compute_grads(params, batch):
+        if not tc.microbatch:
+            (loss, (aux, denom)), grads = grad_fn(params, batch)
+            return loss, aux, grads
+        # grad accumulation: split the global batch into microbatches
+        B = jax.tree.leaves(batch)[0].shape[0]
+        mb = tc.microbatch
+        assert B % mb == 0, (B, mb)
+        n = B // mb
+        mbatch = jax.tree.map(
+            lambda x: x.reshape((n, mb) + x.shape[1:]), batch)
+
+        def body(acc, xs):
+            g_acc, l_acc, a_acc = acc
+            (loss, (aux, _)), grads = grad_fn(params, xs)
+            g_acc = jax.tree.map(jnp.add, g_acc, grads)
+            return (g_acc, l_acc + loss, a_acc + aux), None
+
+        zeros = jax.tree.map(
+            lambda p_: jnp.zeros(p_.shape, jnp.float32), params)
+        (g, l, a), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32),
+                   jnp.zeros((), jnp.float32)), mbatch)
+        inv = 1.0 / n
+        return l * inv, a * inv, jax.tree.map(lambda x: x * inv, g)
+
+    def train_step(params, opt_state, batch):
+        loss, aux, grads = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        lr = cosine_warmup(opt_state.step + 1, peak_lr=tc.learning_rate,
+                           warmup_steps=tc.warmup_steps,
+                           total_steps=tc.total_steps)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr=lr, b1=tc.b1, b2=tc.b2, eps=tc.eps,
+            weight_decay=tc.weight_decay)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm,
+                   "lr": lr, "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,112 @@
+"""Training loop with fault tolerance: auto-resume, async checkpoints,
+preemption handling, straggler logging.
+
+The loop is deliberately thin — all heavy lifting is in the jitted
+train_step; the loop's job is exactly what a cluster supervisor needs:
+deterministic data (stateless in step), atomic checkpoints, resume, and
+health signals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint)
+from repro.configs.base import RunConfig
+from repro.data import make_train_batch
+from repro.models import registry
+from repro.optim import adamw_init
+from repro.runtime import PreemptionGuard, StepWatchdog
+from repro.sharding import rules as shd_rules
+from repro.training.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int
+    final_metrics: Dict
+    resumed_from: Optional[int]
+    straggler_steps: int
+    preempted: bool
+
+
+def train_loop(rc: RunConfig, *, num_steps: int, mesh=None,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+               log_every: int = 10, log_fn: Callable = print,
+               guard: Optional[PreemptionGuard] = None) -> TrainerReport:
+    bundle = registry.build(rc)
+    ctx = shd_rules.make_ctx(mesh, "train") if mesh is not None else None
+
+    params = bundle.init_params(jax.random.key(rc.train.seed))
+    opt_state = adamw_init(params)
+    start_step = 0
+    resumed = None
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        shardings = None
+        if ctx is not None:
+            shardings = {"params": ctx.spec_tree_shardings(bundle.specs),
+                         "opt": None}
+        state, start_step = restore_checkpoint(
+            ckpt_dir, {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        resumed = start_step
+        log_fn(f"[trainer] resumed from step {start_step}")
+
+    step_fn = make_train_step(bundle, rc, shd=ctx)
+    if mesh is not None:
+        pshard = ctx.spec_tree_shardings(bundle.specs)
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    guard = guard or PreemptionGuard(install=False)
+    watchdog = StepWatchdog()
+    metrics = {}
+    preempted = False
+
+    batch_sharding = None
+    if ctx is not None:
+        # batch rows over the DP axes
+        def bshard(name_shape):
+            return ctx.sharding(name_shape, ("act_batch",)
+                                + (None,) * (len(name_shape) - 1))
+        specs = bundle.input_specs("train")
+        batch_sharding = {k: bshard(s.shape) for k, s in specs.items()}
+
+    t_end = start_step + num_steps
+    step = start_step
+    while step < t_end:
+        batch = make_train_batch(rc, step, mesh, batch_sharding)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        slow = watchdog.observe(dt)
+        step += 1
+        if slow:
+            log_fn(f"[watchdog] straggler step {step}: {dt:.3f}s "
+                   f"(ema {watchdog.ema:.3f}s)")
+        if log_every and step % log_every == 0:
+            log_fn(f"[trainer] step {step} loss {float(metrics['loss']):.4f}"
+                   f" gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+        if ckpt and (step % ckpt_every == 0 or guard.should_stop()):
+            ckpt.save(step, {"params": params, "opt": opt_state},
+                      metadata={"step": step})
+        if guard.should_stop():
+            log_fn(f"[trainer] preemption at step {step}: checkpoint + exit")
+            preempted = True
+            break
+    if ckpt:
+        if not preempted and watchdog.count and step % ckpt_every != 0:
+            ckpt.save(step, {"params": params, "opt": opt_state},
+                      metadata={"step": step})
+        ckpt.wait()
+    return TrainerReport(steps_run=step - start_step, final_metrics={
+        k: float(v) for k, v in metrics.items()}, resumed_from=resumed,
+        straggler_steps=watchdog.flagged, preempted=preempted)

@@ -1,0 +1,65 @@
+"""Border policies vs the numpy.pad oracle + index-remap properties."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.borders import (BorderSpec, POLICIES, SAME_SIZE_POLICIES,
+                                gather_rows, map_index, np_pad_mode,
+                                out_shape, extend, valid_mask)
+
+
+@pytest.mark.parametrize("policy", [p for p in SAME_SIZE_POLICIES
+                                    if p != "constant"])
+@pytest.mark.parametrize("n,r", [(8, 1), (8, 3), (5, 2), (16, 3)])
+def test_extend_matches_np_pad(policy, n, r, rng):
+    x = rng.standard_normal((n, n + 3)).astype(np.float32)
+    got = extend(jnp.asarray(x), r, BorderSpec(policy))
+    want = np.pad(x, r, mode=np_pad_mode(policy))
+    np.testing.assert_allclose(np.asarray(got), want)
+
+
+def test_constant_extend(rng):
+    x = rng.standard_normal((6, 7)).astype(np.float32)
+    got = extend(jnp.asarray(x), 2, BorderSpec("constant", 3.5))
+    want = np.pad(x, 2, mode="constant", constant_values=3.5)
+    np.testing.assert_allclose(np.asarray(got), want)
+
+
+@given(n=st.integers(3, 50), r=st.integers(0, 2),
+       policy=st.sampled_from([p for p in POLICIES if p != "neglect"]))
+@settings(max_examples=60, deadline=None)
+def test_map_index_always_in_range(n, r, policy):
+    """Property: any index within one window radius maps inside [0, n)."""
+    idx = jnp.arange(-r, n + r)
+    j = np.asarray(map_index(idx, n, policy))
+    assert j.min() >= 0 and j.max() < n
+
+
+@given(n=st.integers(4, 40))
+@settings(max_examples=30, deadline=None)
+def test_mirror_is_involution_at_edges(n):
+    """reflect: position -k maps to +k; n-1+k maps to n-1-k."""
+    for k in range(1, min(3, n - 1)):
+        assert int(map_index(jnp.asarray(-k), n, "mirror")) == k
+        assert int(map_index(jnp.asarray(n - 1 + k), n, "mirror")) == n - 1 - k
+
+
+def test_interior_identity():
+    """All policies are the identity on interior indices."""
+    n = 10
+    idx = jnp.arange(0, n)
+    for p in POLICIES:
+        np.testing.assert_array_equal(np.asarray(map_index(idx, n, p)),
+                                      np.arange(n))
+
+
+def test_out_shape():
+    assert out_shape(10, 12, 5, BorderSpec("mirror")) == (10, 12)
+    assert out_shape(10, 12, 5, BorderSpec("neglect")) == (6, 8)
+
+
+def test_valid_mask():
+    m = np.asarray(valid_mask(jnp.arange(-2, 5), 3))
+    np.testing.assert_array_equal(m, [False, False, True, True, True,
+                                      False, False])

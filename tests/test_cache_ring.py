@@ -1,0 +1,79 @@
+"""Ring KV-cache slot invariants, incl. reserved sink slots."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import PAD_POS, init_cache, write_cache
+
+
+def _mk(k_rows):
+    """k value rows encode their absolute position for easy checking."""
+    S = len(k_rows)
+    k = jnp.asarray(np.array(k_rows, np.float32)[None, :, None, None])
+    return jnp.broadcast_to(k, (1, S, 2, 4))
+
+
+def test_plain_ring_eviction():
+    cache = init_cache(1, 4, 2, 4, jnp.float32)
+    # write 6 tokens one at a time: slots hold the last 4
+    for p in range(6):
+        cache = write_cache(cache, _mk([p]), _mk([p]), jnp.asarray(p),
+                            pos_new=jnp.asarray([p]))
+    pos = np.asarray(cache["pos"])
+    assert sorted(pos.tolist()) == [2, 3, 4, 5]
+    for slot in range(4):
+        if pos[slot] >= 0:
+            assert pos[slot] % 4 == slot          # slot invariant
+            assert float(cache["k"][0, slot, 0, 0]) == pos[slot]
+
+
+def test_tail_write_matches_incremental():
+    """One big eviction write == token-by-token writes."""
+    L = 4
+    a = init_cache(1, L, 2, 4, jnp.float32)
+    for p in range(7):
+        a = write_cache(a, _mk([p]), _mk([p]), jnp.asarray(p),
+                        pos_new=jnp.asarray([p]))
+    b = init_cache(1, L, 2, 4, jnp.float32)
+    b = write_cache(b, _mk(list(range(7))), _mk(list(range(7))),
+                    jnp.asarray(0), pos_new=jnp.asarray(range(7)))
+    np.testing.assert_array_equal(np.asarray(a["pos"]), np.asarray(b["pos"]))
+    np.testing.assert_array_equal(np.asarray(a["k"]), np.asarray(b["k"]))
+
+
+@given(sinks=st.integers(1, 3), total=st.integers(8, 20))
+@settings(max_examples=20, deadline=None)
+def test_sink_slots_never_evicted(sinks, total):
+    L = sinks + 4
+    cache = init_cache(1, L, 2, 4, jnp.float32)
+    cache = write_cache(cache, _mk(list(range(total))),
+                        _mk(list(range(total))), jnp.asarray(0),
+                        pos_new=jnp.asarray(range(total)), sinks=sinks)
+    pos = np.asarray(cache["pos"])
+    # sink positions 0..sinks-1 pinned at their slots
+    np.testing.assert_array_equal(pos[:sinks], np.arange(sinks))
+    # ring part holds the last L-sinks tokens with the ring invariant
+    ring = pos[sinks:]
+    assert sorted(ring.tolist()) == list(range(total - (L - sinks), total))
+    for j, p_ in enumerate(ring):
+        assert sinks + (p_ - sinks) % (L - sinks) == sinks + j
+
+
+def test_sink_decode_continuation():
+    """Decode writes after an eviction prefill keep both invariants."""
+    sinks, L, total = 2, 6, 10
+    cache = init_cache(1, L, 2, 4, jnp.float32)
+    cache = write_cache(cache, _mk(list(range(total))),
+                        _mk(list(range(total))), jnp.asarray(0),
+                        pos_new=jnp.asarray(range(total)), sinks=sinks)
+    for p in range(total, total + 5):
+        cache = write_cache(cache, _mk([p]), _mk([p]), jnp.asarray(p),
+                            pos_new=jnp.asarray([p]), sinks=sinks)
+    pos = np.asarray(cache["pos"])
+    np.testing.assert_array_equal(pos[:sinks], np.arange(sinks))
+    ring = pos[sinks:]
+    assert sorted(ring.tolist()) == list(range(11, 15))
+    for slot, p_ in enumerate(ring):
+        assert (p_ - sinks) % (L - sinks) == slot

@@ -1,0 +1,94 @@
+"""Prefill→decode equals teacher-forced forward (all LM archs + whisper).
+
+MoE archs run with a no-drop capacity factor: GShard capacity drops make
+the teacher-forced oracle lossy by design (verified separately in
+test_moe.py), so exact equivalence needs drop-free routing.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, RunConfig, SHAPES, SINGLE_POD
+from repro.configs.tiny import tiny_of
+from repro.models import registry
+
+S = 24
+
+
+def _rc(arch):
+    mc = tiny_of(arch)
+    if mc.family == "moe":
+        mc = dataclasses.replace(mc, capacity_factor=8.0)
+    sh = dataclasses.replace(SHAPES["prefill_32k"], seq_len=S + 8,
+                             global_batch=2)
+    return RunConfig(model=mc, shape=sh, mesh=SINGLE_POD)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if a != "whisper_large_v3"])
+def test_prefill_decode_consistency(arch, rng):
+    rc = _rc(arch)
+    mc = rc.model
+    b = registry.build(rc)
+    params = b.init_params(jax.random.key(1))
+    if mc.embeddings_in:
+        full = jnp.asarray(rng.standard_normal((2, S + 1, mc.d_model)),
+                           jnp.float32)
+    else:
+        full = jnp.asarray(rng.integers(0, 255, (2, S + 1)), jnp.int32)
+    oracle, _ = b.train_forward(params, {"inputs": full})
+    last, caches = b.prefill(params, {"inputs": full[:, :S]})
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(oracle[:, S - 1]),
+                               rtol=3e-4, atol=3e-4)
+    cur = jnp.asarray(S + mc.num_meta_tokens, jnp.int32)
+    step, caches = b.decode_step(params, full[:, S:S + 1], caches, cur)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(oracle[:, S]),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_whisper_consistency(rng):
+    rc = _rc("whisper_large_v3")
+    mc = rc.model
+    b = registry.build(rc)
+    params = b.init_params(jax.random.key(2))
+    T = 12
+    frames = jnp.asarray(rng.standard_normal((2, 20, mc.d_model)),
+                         jnp.float32)
+    dec = jnp.asarray(rng.integers(0, 255, (2, T + 1)), jnp.int32)
+    oracle, _ = b.train_forward(params, {"frames": frames,
+                                         "dec_tokens": dec})
+    last, caches = b.prefill(params, {"frames": frames,
+                                      "dec_tokens": dec[:, :T]})
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(oracle[:, T - 1]),
+                               rtol=3e-4, atol=3e-4)
+    step, _ = b.decode_step(params, dec[:, T:T + 1], caches,
+                            jnp.asarray(T, jnp.int32))
+    np.testing.assert_allclose(np.asarray(step), np.asarray(oracle[:, T]),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_multi_token_greedy_decode(rng):
+    """8 greedy decode steps equal teacher forcing on the argmax path."""
+    rc = _rc("gemma3_4b")
+    b = registry.build(rc)
+    params = b.init_params(jax.random.key(3))
+    prompt = jnp.asarray(rng.integers(0, 255, (2, 8)), jnp.int32)
+    last, caches = b.prefill(params, {"inputs": prompt})
+    toks = [jnp.argmax(last, -1)]
+    cur = 8
+    for i in range(6):
+        logits, caches = b.decode_step(
+            params, toks[-1][:, None], caches, jnp.asarray(cur, jnp.int32))
+        toks.append(jnp.argmax(logits, -1))
+        cur += 1
+    # oracle: feed the full greedy sequence through the forward pass
+    seq = jnp.concatenate([prompt] + [t[:, None] for t in toks[:-1]], axis=1)
+    oracle, _ = b.train_forward(params, {"inputs": seq})
+    for i, t in enumerate(toks):
+        want = jnp.argmax(oracle[:, 8 + i - 1], -1)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(want))

@@ -1,0 +1,107 @@
+"""Filter forms (paper §II): all four reduction layouts compute the same
+filter; the XLA-inferred baseline agrees; the bank applies N filters in one
+pass; streaming (row-buffer) equals the frame-resident path."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import filters
+from repro.core.borders import BorderSpec, np_pad_mode
+from repro.core.filter2d import (FORMS, filter2d, filter2d_xla, filter_bank,
+                                 macs_per_pixel, reduction_depth,
+                                 startup_latency_rows)
+from repro.core.streaming import filter2d_streaming
+
+
+def np_filter(x, k, mode):
+    r = k.shape[0] // 2
+    if mode is None:
+        xp, (H, W) = x, (x.shape[0] - 2 * r, x.shape[1] - 2 * r)
+    else:
+        xp, (H, W) = np.pad(x, r, mode=mode), x.shape
+    out = np.zeros((H, W), np.float32)
+    for i in range(k.shape[0]):
+        for j in range(k.shape[1]):
+            out += xp[i:i + H, j:j + W] * k[i, j]
+    return out
+
+
+@pytest.mark.parametrize("form", FORMS)
+@pytest.mark.parametrize("policy", ["mirror", "duplicate", "neglect"])
+@pytest.mark.parametrize("w", [3, 5, 7])
+def test_forms_match_numpy(form, policy, w, rng):
+    x = rng.standard_normal((21, 17)).astype(np.float32)
+    k = filters.gaussian(w)
+    got = filter2d(jnp.asarray(x), jnp.asarray(k), form=form,
+                   border=BorderSpec(policy))
+    want = np_filter(x, k, np_pad_mode(policy))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=3e-5, atol=3e-5)
+
+
+def test_xla_baseline_agrees(rng):
+    x = rng.standard_normal((32, 40)).astype(np.float32)
+    k = filters.log_filter(7)
+    a = filter2d(jnp.asarray(x), jnp.asarray(k))
+    b = filter2d_xla(jnp.asarray(x), jnp.asarray(k))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5,
+                               atol=3e-5)
+
+
+def test_runtime_coefficients_no_recompile(rng):
+    """One jitted executable serves different coefficients (paper §I)."""
+    x = jnp.asarray(rng.standard_normal((16, 16)).astype(np.float32))
+    k1, k2 = jnp.asarray(filters.gaussian(3)), jnp.asarray(filters.sharpen())
+    y1 = filter2d(x, k1)
+    y2 = filter2d(x, k2)
+    assert not np.allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_zero_ring_embedding(rng):
+    """A 3x3 filter embedded in a 7x7 zero ring gives identical output
+    (paper: one w_max window serves all smaller filters)."""
+    x = jnp.asarray(rng.standard_normal((20, 20)).astype(np.float32))
+    k3 = filters.sharpen()
+    k7 = np.asarray(filters.embed_window(jnp.asarray(k3), 7))
+    y3 = filter2d(x, jnp.asarray(k3))
+    y7 = filter2d(x, jnp.asarray(k7))
+    np.testing.assert_allclose(np.asarray(y3), np.asarray(y7), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_filter_bank(rng):
+    x = rng.standard_normal((18, 14)).astype(np.float32)
+    bank = jnp.stack([jnp.asarray(filters.gaussian(5)),
+                      jnp.asarray(filters.box(5)),
+                      jnp.asarray(filters.identity(5))])
+    y = filter_bank(jnp.asarray(x), bank)
+    assert y.shape == (18, 14, 3)
+    np.testing.assert_allclose(np.asarray(y[..., 2]), x, rtol=2e-5,
+                               atol=2e-5)  # identity slot
+
+
+@given(sh=st.sampled_from([8, 16, 32]),
+       w=st.sampled_from([3, 5, 7]),
+       policy=st.sampled_from(["mirror", "mirror_dup", "duplicate",
+                               "constant"]))
+@settings(max_examples=25, deadline=None)
+def test_streaming_equals_resident(sh, w, policy):
+    """Property: the row-buffer streaming schedule is output-invariant."""
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal((64, 24)).astype(np.float32)
+    k = jnp.asarray(filters.gaussian(w))
+    ref = filter2d(jnp.asarray(x), k, border=BorderSpec(policy))
+    got = filter2d_streaming(jnp.asarray(x), k, border_policy=policy,
+                             strip_h=sh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=3e-5,
+                               atol=3e-5)
+
+
+def test_unit_accounting():
+    """Paper Tables I/II analogues."""
+    assert macs_per_pixel(7, "direct") == 49
+    assert reduction_depth(7, "tree") == 6       # ceil(log2 49)
+    assert reduction_depth(7, "direct") == 1     # systolic
+    assert reduction_depth(7, "compress") == 2 + 8  # ceil(49/6)=9 groups
+    assert startup_latency_rows(7, "direct") == 3.0
+    assert startup_latency_rows(7, "transposed") == 6.0

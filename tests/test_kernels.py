@@ -1,0 +1,154 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import filters
+from repro.core.borders import BorderSpec
+from repro.kernels.dwconv1d import dwconv1d_pallas, dwconv1d_ref
+from repro.kernels.filter2d import filter2d_pallas, filter2d_ref
+from repro.kernels.swattn import swattn_pallas, swattn_ref
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=3e-4, atol=3e-4)
+
+
+# -- filter2d ----------------------------------------------------------------
+
+@pytest.mark.parametrize("H,W", [(32, 24), (33, 150), (128, 129)])
+@pytest.mark.parametrize("w", [3, 5, 7])
+@pytest.mark.parametrize("regime", ["small", "stream"])
+def test_filter2d_shapes(H, W, w, regime, rng):
+    x = jnp.asarray(rng.standard_normal((H, W)).astype(np.float32))
+    k = jnp.asarray(filters.gaussian(w))
+    ref = filter2d_ref(x, k, "mirror")
+    got = filter2d_pallas(x, k, border=BorderSpec("mirror"), regime=regime,
+                          strip_h=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               **_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("form", ["direct", "transposed", "tree", "compress"])
+@pytest.mark.parametrize("policy", ["mirror", "duplicate", "constant",
+                                    "neglect"])
+def test_filter2d_forms_policies(form, policy, rng):
+    x = jnp.asarray(rng.standard_normal((48, 40)).astype(np.float32))
+    k = jnp.asarray(filters.log_filter(5))
+    ref = filter2d_ref(x, k, policy)
+    got = filter2d_pallas(x, k, form=form, border=BorderSpec(policy),
+                          regime="stream", strip_h=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               **_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_filter2d_dtypes(dtype, rng):
+    x = jnp.asarray(rng.standard_normal((32, 32)), dtype)
+    k = jnp.asarray(filters.gaussian(5), dtype)
+    ref = filter2d_ref(x.astype(jnp.float32), k.astype(jnp.float32), "mirror")
+    got = filter2d_pallas(x, k, regime="stream", strip_h=16)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref), **_tol(dtype))
+
+
+def test_filter2d_batched(rng):
+    x = jnp.asarray(rng.standard_normal((2, 32, 24, 3)).astype(np.float32))
+    k = jnp.asarray(filters.sobel_x())
+    ref = filter2d_ref(x, k, "mirror")
+    got = filter2d_pallas(x, k, regime="small")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               **_tol(jnp.float32))
+
+
+# -- dwconv1d ----------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,C,k,chunk", [
+    (2, 64, 16, 4, 16), (1, 100, 8, 3, 32), (3, 512, 128, 4, 512),
+    (2, 33, 5, 2, 8), (1, 16, 1, 4, 16)])
+def test_dwconv1d_shapes(B, S, C, k, chunk, rng):
+    x = jnp.asarray(rng.standard_normal((B, S, C)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((C, k)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((C,)).astype(np.float32))
+    ref = dwconv1d_ref(x, w.T, b)
+    got = dwconv1d_pallas(x, w, b, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               **_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dwconv1d_dtypes(dtype, rng):
+    x = jnp.asarray(rng.standard_normal((2, 64, 8)), dtype)
+    w = jnp.asarray(rng.standard_normal((8, 4)), dtype)
+    b = jnp.zeros((8,), dtype)
+    ref = dwconv1d_ref(x.astype(jnp.float32), w.T.astype(jnp.float32),
+                       b.astype(jnp.float32))
+    got = dwconv1d_pallas(x, w, b, chunk=32)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(ref),
+                               **_tol(dtype))
+
+
+def test_dwconv1d_matches_model_layer(rng):
+    """Kernel agrees with the model-side jnp dwconv (weights [C,k])."""
+    from repro.models.layers import dwconv1d
+    x = jnp.asarray(rng.standard_normal((2, 40, 6)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((6, 4)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((6,)).astype(np.float32))
+    want, _ = dwconv1d(x, {"w": w, "b": b})
+    got = dwconv1d_pallas(x, w, b, chunk=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(jnp.float32))
+
+
+# -- swattn -------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,hd,win,blk", [
+    (1, 256, 4, 2, 64, 64, 64),
+    (2, 128, 4, 4, 32, 0, 32),      # full causal
+    (1, 300, 8, 2, 64, 100, 64),    # ragged S, window not blk-aligned
+    (1, 512, 2, 1, 128, 128, 128),
+    (2, 64, 4, 2, 64, 16, 16),
+    (1, 128, 4, 1, 32, 1, 32),      # window=1: diagonal only
+])
+def test_swattn_shapes(B, S, H, KV, hd, win, blk, rng):
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    ref = swattn_ref(q, k, v, window=win, scale=hd ** -0.5)
+    got = swattn_pallas(q, k, v, window=win, blk=blk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swattn_dtypes(dtype, rng):
+    B, S, H, hd = 1, 128, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    f32 = jnp.float32
+    ref = swattn_ref(q.astype(f32), k.astype(f32), v.astype(f32),
+                     window=32, scale=hd ** -0.5)
+    got = swattn_pallas(q, k, v, window=32, blk=64)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(ref),
+                               **_tol(dtype))
+
+
+def test_swattn_matches_model_attention(rng):
+    """Kernel equals the model's masked attend() for a sliding window."""
+    from repro.models.attention import attend, repeat_kv
+    B, S, H, KV, hd, win = 1, 128, 4, 2, 32, 48
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    want = attend(q, repeat_kv(k, H), repeat_kv(v, H), pos, pos,
+                  causal=True, window=win, q_chunk=0)
+    got = swattn_pallas(q, k, v, window=win, blk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)

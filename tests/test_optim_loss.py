@@ -1,0 +1,112 @@
+"""Optimizer, schedule, clipping, compression, and loss-path tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_warmup, global_norm, int8_ef_compress,
+                         int8_ef_decompress)
+from repro.training.loss import ce_loss, chunked_ce_from_hidden
+
+
+def _np_adamw(p, g, m, v, t, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    return p - lr * (mh / (np.sqrt(vh) + eps) + wd * p), m, v
+
+
+def test_adamw_matches_numpy(rng):
+    p = {"a": jnp.asarray(rng.standard_normal((4, 3)).astype(np.float32)),
+         "b": {"c": jnp.asarray(rng.standard_normal(5).astype(np.float32))}}
+    g = jax.tree.map(lambda x: x * 0.1 + 0.01, p)
+    st_ = adamw_init(p)
+    lr = 1e-2
+    p1, st1 = adamw_update(p, g, st_, lr=lr)
+    for key in ("a",):
+        want, _, _ = _np_adamw(np.asarray(p[key]), np.asarray(g[key]),
+                               np.zeros_like(p[key]), np.zeros_like(p[key]),
+                               1, lr)
+        np.testing.assert_allclose(np.asarray(p1[key]), want, rtol=1e-5,
+                                   atol=1e-6)
+    assert int(st1.step) == 1
+
+
+def test_cosine_warmup_shape():
+    lrs = [float(cosine_warmup(s, peak_lr=1.0, warmup_steps=10,
+                               total_steps=100)) for s in range(100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 0.1
+    assert lrs[99] < 0.2 and lrs[99] >= 0.1 - 1e-6   # decays to min_ratio
+    assert max(lrs) <= 1.0 + 1e-6
+
+
+def test_clip_by_global_norm(rng):
+    t = {"x": jnp.asarray(rng.standard_normal((100,)).astype(np.float32))
+         * 100}
+    clipped, n = clip_by_global_norm(t, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-5
+    assert float(n) > 1.0
+
+
+@given(scale=st.floats(1e-3, 1e3))
+@settings(max_examples=30, deadline=None)
+def test_int8_ef_roundtrip_error_bound(scale):
+    """Property: quantisation error per element <= scale/254 of the max."""
+    rng = np.random.default_rng(7)
+    g = jnp.asarray(rng.standard_normal(256).astype(np.float32) * scale)
+    err0 = jnp.zeros_like(g)
+    q, s, err = int8_ef_compress(g, err0)
+    back = int8_ef_decompress(q, s)
+    max_err = float(jnp.max(jnp.abs(back - g)))
+    assert max_err <= float(s) * 0.5 + 1e-9          # round-to-nearest
+    # error feedback stores exactly the residual
+    np.testing.assert_allclose(np.asarray(err), np.asarray(g - back),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_ef_accumulation_converges(rng):
+    """Constant gradient + EF: the mean dequantised stream converges to the
+    true value (the EF property that keeps compressed SGD unbiased)."""
+    g = jnp.asarray(rng.standard_normal(64).astype(np.float32) * 1e-3)
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    n = 50
+    for _ in range(n):
+        q, s, err = int8_ef_compress(g, err)
+        acc = acc + int8_ef_decompress(q, s)
+    np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g),
+                               rtol=0.02, atol=1e-6)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_chunked_ce_matches_plain(chunk, rng):
+    B, S, D, V = 2, 32, 16, 50
+    h = jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((D, V)).astype(np.float32) * 0.1)
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    logits = jnp.einsum("bsd,dv->bsv", h, w)
+    want, _ = ce_loss(logits, labels)
+    got, _ = chunked_ce_from_hidden(h, w, labels, chunk=chunk)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_chunked_ce_tied_head(rng):
+    B, S, D, V = 2, 16, 8, 30
+    h = jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32))
+    table = jnp.asarray(rng.standard_normal((V, D)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    want, _ = ce_loss(jnp.einsum("bsd,vd->bsv", h, table), labels)
+    got, _ = chunked_ce_from_hidden(h, table, labels, chunk=8,
+                                    transpose_head=True)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_ce_ignore_index(rng):
+    logits = jnp.asarray(rng.standard_normal((1, 4, 10)).astype(np.float32))
+    labels = jnp.asarray([[1, 2, -100, 3]], jnp.int32)
+    loss, denom = ce_loss(logits, labels)
+    assert float(denom) == 3.0

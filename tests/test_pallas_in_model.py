@@ -1,0 +1,45 @@
+"""The Pallas kernels as first-class model features: opt-in attention /
+conv paths equal the jnp paths inside full model forwards."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import RunConfig, SHAPES, SINGLE_POD
+from repro.configs.tiny import tiny_of
+from repro.models import registry
+
+
+@pytest.mark.parametrize("arch", ["h2o_danube_1_8b", "yi_6b"])
+def test_pallas_attention_in_model(arch, rng):
+    mc = tiny_of(arch)
+    sh = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=2)
+    toks = jnp.asarray(rng.integers(0, 255, (2, 64)), jnp.int32)
+    outs = {}
+    for flag in (False, True):
+        mc2 = dataclasses.replace(mc, use_pallas_attn=flag)
+        rc = RunConfig(model=mc2, shape=sh, mesh=SINGLE_POD)
+        b = registry.build(rc)
+        params = b.init_params(jax.random.key(7))
+        logits, _ = b.train_forward(params, {"inputs": toks})
+        outs[flag] = np.asarray(logits)
+    np.testing.assert_allclose(outs[True], outs[False], rtol=3e-4,
+                               atol=3e-4)
+
+
+def test_pallas_conv_in_mamba(rng):
+    """dwconv1d kernel inside the mamba block == jnp conv path."""
+    from repro.models import ssm as ssm_mod
+    from repro.models.module import init_params
+    mc = dataclasses.replace(tiny_of("hymba_1_5b"), num_meta_tokens=0)
+    specs = ssm_mod.mamba_specs(mc.d_model, expand=mc.ssm_expand,
+                                heads=mc.mamba_heads, state=mc.ssm_state,
+                                conv_width=mc.ssm_conv_width)
+    params = init_params(specs, jax.random.key(3))
+    x = jnp.asarray(rng.standard_normal((2, 32, mc.d_model)), jnp.float32)
+    y0, _ = ssm_mod.mamba_block(x, params, mc, use_pallas_conv=False)
+    y1, _ = ssm_mod.mamba_block(x, params, mc, use_pallas_conv=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=3e-4,
+                               atol=3e-4)

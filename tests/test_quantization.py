@@ -1,0 +1,61 @@
+"""int8 paths: fixed-point filtering (paper B=8) + int8 KV-cache decode."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import RunConfig, SHAPES, SINGLE_POD
+from repro.configs.tiny import tiny_of
+from repro.core.borders import BorderSpec
+from repro.core.filter2d import FORMS, filter2d
+from repro.models import registry
+from repro.models.attention import dequantize_kv, quantize_kv
+
+
+def test_int8_filter_exact_integer_accumulate(rng):
+    """The paper's B=8 datapath: int8 pixels, integer coefficients, wide
+    accumulation — bit-exact against a numpy int64 oracle."""
+    x = rng.integers(-128, 128, (24, 30)).astype(np.int8)
+    k = np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]], np.int32)
+    xp = np.pad(x.astype(np.int64), 1, mode="reflect")
+    ref = sum(xp[i:i + 24, j:j + 30] * k[i, j]
+              for i in range(3) for j in range(3))
+    for form in FORMS:
+        y = filter2d(jnp.asarray(x), jnp.asarray(k, jnp.int32), form=form,
+                     border=BorderSpec("mirror"))
+        assert y.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(y, np.int64), ref, err_msg=form)
+
+
+def test_kv_quantize_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((2, 8, 4, 16)).astype(np.float32))
+    q, s = quantize_kv(x)
+    back = dequantize_kv(q, s, jnp.float32)
+    # symmetric per-(pos, head) int8: error bounded by scale/2
+    err = np.asarray(jnp.abs(back - x))
+    bound = np.asarray(s)[..., None] * 0.5 + 1e-6
+    assert np.all(err <= bound)
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "gemma3_4b"])
+def test_int8_kv_decode_close_to_fp(arch, rng):
+    S = 24
+    mc = tiny_of(arch)
+    sh = dataclasses.replace(SHAPES["prefill_32k"], seq_len=S + 8,
+                             global_batch=2)
+    full = jnp.asarray(rng.integers(0, 255, (2, S + 1)), jnp.int32)
+    outs = {}
+    for kvdt in ("", "int8"):
+        mc2 = dataclasses.replace(mc, kv_cache_dtype=kvdt)
+        rc = RunConfig(model=mc2, shape=sh, mesh=SINGLE_POD)
+        b = registry.build(rc)
+        params = b.init_params(jax.random.key(1))
+        _, caches = b.prefill(params, {"inputs": full[:, :S]})
+        cur = jnp.asarray(S + mc.num_meta_tokens, jnp.int32)
+        step, _ = b.decode_step(params, full[:, S:S + 1], caches, cur)
+        outs[kvdt] = np.asarray(step)
+    rel = (np.abs(outs["int8"] - outs[""]).max()
+           / (np.abs(outs[""]).max() + 1e-9))
+    assert rel < 0.05, rel

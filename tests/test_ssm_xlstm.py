@@ -1,0 +1,136 @@
+"""Recurrence equivalences: SSD chunked == naive sequential == step;
+mLSTM chunkwise == parallel == step replay; sLSTM state continuation."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import ssd_chunked, ssd_step
+from repro.models.xlstm import (_mlstm_parallel, _mlstm_step,
+                                mlstm_chunkwise, slstm_scan)
+
+B, S, H, dh, N = 2, 64, 3, 8, 5
+
+
+@pytest.fixture
+def ssd_inputs(rng):
+    x = jnp.asarray(rng.standard_normal((B, S, H, dh)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, H))) .astype(
+        np.float32)) * 0.5
+    A = -jnp.asarray(np.abs(rng.standard_normal((H,))).astype(np.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    return x, dt, A, Bm, Cm
+
+
+def _ssd_naive(x, dt, A, Bm, Cm):
+    h = np.zeros((B, H, dh, N), np.float32)
+    ys = []
+    for t in range(S):
+        dec = np.exp(np.asarray(dt)[:, t] * np.asarray(A))
+        u = np.asarray(x)[:, t] * np.asarray(dt)[:, t][..., None]
+        h = dec[:, :, None, None] * h + np.einsum(
+            "bhd,bn->bhdn", u, np.asarray(Bm)[:, t])
+        ys.append(np.einsum("bhdn,bn->bhd", h, np.asarray(Cm)[:, t]))
+    return np.stack(ys, 1), h
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunked_vs_naive(ssd_inputs, chunk):
+    x, dt, A, Bm, Cm = ssd_inputs
+    ref_y, ref_h = _ssd_naive(x, dt, A, Bm, Cm)
+    y, hf = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), ref_y, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), ref_h, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_step_matches_chunked(ssd_inputs):
+    x, dt, A, Bm, Cm = ssd_inputs
+    ref_y, _ = _ssd_naive(x, dt, A, Bm, Cm)
+    h = jnp.zeros((B, H, dh, N), jnp.float32)
+    for t in range(8):
+        y1, h = ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        np.testing.assert_allclose(np.asarray(y1), ref_y[:, t], rtol=2e-4,
+                                   atol=2e-4)
+
+
+def test_ssd_state_handoff(ssd_inputs):
+    """chunked(first half) state feeds chunked(second half) exactly."""
+    x, dt, A, Bm, Cm = ssd_inputs
+    y_full, h_full = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    y1, h1 = ssd_chunked(x[:, :32], dt[:, :32], A, Bm[:, :32], Cm[:, :32],
+                         chunk=16)
+    y2, h2 = ssd_chunked(x[:, 32:], dt[:, 32:], A, Bm[:, 32:], Cm[:, 32:],
+                         h0=h1, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.fixture
+def mlstm_inputs(rng):
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, H, dh)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, H, dh)).astype(np.float32))
+    i_g = jnp.asarray(rng.standard_normal((B, S, H)).astype(np.float32))
+    f_g = jnp.asarray(rng.standard_normal((B, S, H)).astype(np.float32) + 2)
+    return q, k, v, i_g, f_g
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_mlstm_chunkwise_vs_parallel(mlstm_inputs, chunk):
+    q, k, v, i_g, f_g = mlstm_inputs
+    want = _mlstm_parallel(q, k, v, i_g, f_g)
+    got, _ = mlstm_chunkwise(q, k, v, i_g, f_g, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4,
+                               atol=3e-4)
+
+
+def test_mlstm_chunkwise_state_matches_step_replay(mlstm_inputs):
+    q, k, v, i_g, f_g = mlstm_inputs
+    st = (jnp.zeros((B, H, dh, dh)), jnp.zeros((B, H, dh)),
+          jnp.full((B, H), -1e30))
+    for t in range(S):
+        _, st = _mlstm_step(q[:, t], k[:, t], v[:, t], i_g[:, t], f_g[:, t],
+                            st)
+    _, fin = mlstm_chunkwise(q, k, v, i_g, f_g, chunk=16,
+                             state=(jnp.zeros((B, H, dh, dh)),
+                                    jnp.zeros((B, H, dh)),
+                                    jnp.full((B, H), -1e30)))
+    for a, b_ in zip(st, fin):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=3e-4,
+                                   atol=3e-4)
+
+
+@given(scale=st.floats(0.1, 3.0))
+@settings(max_examples=10, deadline=None)
+def test_mlstm_stability_property(scale):
+    """Property: outputs stay finite under extreme gate magnitudes (the
+    stabilised-exponential invariant the paper's m-state exists for)."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 32, 2, 8)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 32, 2, 8)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 32, 2, 8)).astype(np.float32))
+    i_g = jnp.asarray(rng.standard_normal((1, 32, 2)).astype(np.float32)
+                      * 20 * scale)
+    f_g = jnp.asarray(rng.standard_normal((1, 32, 2)).astype(np.float32)
+                      * 20 * scale)
+    y, _ = mlstm_chunkwise(q, k, v, i_g, f_g, chunk=8)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_slstm_continuation(rng):
+    d, heads = 24, 3
+    g = jnp.asarray(rng.standard_normal((B, S, 4 * d)).astype(np.float32))
+    r = jnp.asarray(rng.standard_normal((heads, 4, d // heads, d // heads))
+                    .astype(np.float32) * 0.01)
+    b_ = jnp.zeros((4 * d,))
+    hs, fin = slstm_scan(g, r, b_, heads)
+    assert np.all(np.isfinite(np.asarray(hs)))
+    hs1, st1 = slstm_scan(g[:, :S // 2], r, b_, heads)
+    hs2, _ = slstm_scan(g[:, S // 2:], r, b_, heads, st1)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([hs1, hs2], 1)), np.asarray(hs),
+        rtol=1e-5, atol=1e-5)
