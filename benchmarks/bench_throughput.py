@@ -15,6 +15,7 @@ from repro.core import filters
 from repro.core.borders import BorderSpec
 from repro.core.filter2d import filter2d
 from repro.core.streaming import filter2d_streaming, strip_height_for_vmem
+from repro.kernels.filter2d import stream_vmem_working_set
 
 
 def run():
@@ -36,6 +37,28 @@ def run():
             f"throughput/{name}", us,
             f"cpu_fps={cpu_fps:.1f};tpu_v5e_bound_fps={tpu_fps:.0f};"
             f"paper_claim_fps={claim_fps};vmem_strip_h={sh}"))
+    # 8K (7680-wide): width no longer fits a VMEM strip after lane padding —
+    # the column-tiled streaming regime caps the working set at
+    # strip_h × tile_w while HBM sets the rate (analytic row; the kernel
+    # itself is correctness-asserted in tests, interpret-mode wall time is
+    # not meaningful).
+    sh8, tw8, w8 = 128, 512, 7
+    ws = stream_vmem_working_set(sh8, tw8, w8)
+    pix8k = 4320 * 7680
+    out.append(row(
+        "throughput/8k_stream_budget", 0.0,
+        f"tpu_v5e_bound_fps={HBM_BW / 8.0 / pix8k:.0f};"
+        f"vmem_working_set_bytes={ws};strip_h={sh8};tile_w={tw8}"))
+    # wall time of an 8K-wide band through the CORE (XLA) path: the
+    # separable fast path (2w MACs) vs the w² direct form.
+    band = jnp.asarray(rng.standard_normal((270, 7680)).astype(np.float32))
+    us_d = time_call(lambda a, b: filter2d(a, b), band, k, iters=3)
+    us_s = time_call(lambda a, b: filter2d(a, b, separable=True), band, k,
+                     iters=3)
+    out.append(row(
+        "throughput/8k_band_core", us_d,
+        f"band_mpix_s_direct={band.size / (us_d / 1e6) / 1e6:.1f};"
+        f"band_mpix_s_separable={band.size / (us_s / 1e6) / 1e6:.1f}"))
     # int8 pixels (paper B=8): 2 bytes/pixel moved -> 4x the fp32 rate
     out.append(row("throughput/int8_note", 0.0,
                    f"tpu_v5e_bound_fps_480p_int8="

@@ -12,10 +12,15 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 
+# Set by ``benchmarks.run --smoke``: CI-budget timing (fewer warmups/iters).
+SMOKE = False
+
 
 def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10
               ) -> float:
     """Median wall time per call in microseconds (CPU this container)."""
+    if SMOKE:
+        warmup, iters = 1, 2
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -29,6 +34,8 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10
 def hlo_costs(fn: Callable, *abstract_args) -> Dict[str, float]:
     c = jax.jit(fn).lower(*abstract_args).compile()
     ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):     # older jax returns [dict]
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0))}
 

@@ -1,8 +1,10 @@
 """Benchmark harness: one module per paper table (+ LM roofline summary).
 
-  PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+  PYTHONPATH=src python -m benchmarks.run [--only <substr>] [--smoke]
 
-Prints ``name,us_per_call,derived`` CSV.
+``--smoke`` is the CI mode: filter-path modules only, reduced timing
+iterations — a fast end-to-end exercise of every bench code path on the
+CPU-interpret backend. Prints ``name,us_per_call,derived`` CSV.
 """
 from __future__ import annotations
 
@@ -13,7 +15,12 @@ import sys
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args(argv)
+
+    from benchmarks import common
+    if args.smoke:
+        common.SMOKE = True
 
     from benchmarks import (bench_border_overhead, bench_filter_forms,
                             bench_hls_comparison, bench_lm_roofline,
@@ -25,6 +32,10 @@ def main(argv=None) -> None:
         ("throughput", bench_throughput),
         ("lm_roofline", bench_lm_roofline),
     ]
+    if args.smoke:
+        modules = [m for m in modules
+                   if m[0] in ("filter_forms", "border_overhead",
+                               "throughput")]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in modules:

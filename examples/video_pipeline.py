@@ -24,6 +24,9 @@ def main():
     ap.add_argument("--frames", type=int, default=12)
     ap.add_argument("--height", type=int, default=480)
     ap.add_argument("--width", type=int, default=640)
+    ap.add_argument("--pallas", action="store_true",
+                    help="run the bank through the column-tiled streaming "
+                         "kernel (8K-ready; interpret mode off-TPU)")
     args = ap.parse_args()
 
     cf = default_bank(w_max=7, num_slots=8)
@@ -32,17 +35,24 @@ def main():
     t0 = time.perf_counter()
     px = 0
     prev_mean = None
+    if args.pallas:
+        from repro.kernels.filter2d import filter_bank_pallas
+        bank_fn = lambda f, b: filter_bank_pallas(f, b)
+    else:
+        bank_fn = filter_bank
     for i in range(args.frames):
         frame = jnp.asarray(next(stream)[..., 0])
-        # low-level: one MXU pass applies the whole bank (filter cascade)
-        feats = filter_bank(frame, cf.as_bank()[:4])
+        # low-level: one pass applies the whole bank (coefficient file as a
+        # grid dim on the Pallas path, one MXU contraction on the jnp path)
+        feats = bank_fn(frame, cf.as_bank()[:4])
         # "higher layer": scene statistics choose the next frame's filter
         m = float(feats[..., 0].mean())
         if prev_mean is not None and abs(m - prev_mean) > 0.01:
             active_slot = (active_slot + 1) % 4     # adapt: swap coefficients
         prev_mean = m
+        # rank-1 slots (gaussian/box) take the separable 2w-MAC fast path
         out = filter2d(frame, cf.read(active_slot),
-                       border=BorderSpec("mirror"))
+                       border=BorderSpec("mirror"), separable="auto")
         jax.block_until_ready(out)
         px += frame.size
     dt = time.perf_counter() - t0

@@ -10,5 +10,6 @@ Submodules:
 from repro.core.borders import BorderSpec, POLICIES, SAME_SIZE_POLICIES
 from repro.core.filter2d import (FORMS, filter2d, filter2d_xla, filter_bank,
                                  macs_per_pixel, reduction_depth)
-from repro.core.filters import CoefficientFile, default_bank, preset
+from repro.core.filters import (CoefficientFile, decompose_separable,
+                                default_bank, preset)
 from repro.core.streaming import filter2d_streaming, strip_height_for_vmem

@@ -32,8 +32,10 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.borders import BorderSpec, extend, out_shape
+from repro.core.filters import decompose_separable
 
 FORMS = ("direct", "transposed", "tree", "compress")
 
@@ -136,6 +138,24 @@ _FORM_FNS = {
 }
 
 
+def _extend_policy(frame: jax.Array, r: int, border_policy: str,
+                   border_constant: jax.Array) -> jax.Array:
+    """Border-extend an NHWC frame along (H, W) under the policy."""
+    B, H, W, C = frame.shape
+    if border_policy == "neglect" or r == 0:
+        return frame
+    if border_policy == "constant":
+        # extend() handles the value through the mask path; inline it here
+        xp = extend(frame, r, BorderSpec("duplicate"), axes=(1, 2))
+        # overwrite out-of-frame ring with the constant
+        hi = jnp.arange(-r, H + r)
+        wi = jnp.arange(-r, W + r)
+        mh = ((hi >= 0) & (hi < H))[None, :, None, None]
+        mw = ((wi >= 0) & (wi < W))[None, None, :, None]
+        return jnp.where(mh & mw, xp, border_constant.astype(xp.dtype))
+    return extend(frame, r, BorderSpec(border_policy), axes=(1, 2))
+
+
 @functools.partial(jax.jit, static_argnames=("form", "border_policy"))
 def _filter2d_impl(frame: jax.Array, coeffs: jax.Array, *, form: str,
                    border_policy: str, border_constant: jax.Array
@@ -151,35 +171,93 @@ def _filter2d_impl(frame: jax.Array, coeffs: jax.Array, *, form: str,
     B, H, W, C = frame.shape
     w = coeffs.shape[-1]
     r = (w - 1) // 2
-    if border_policy == "constant":
-        # extend() handles the value through the mask path; inline it here
-        spec = BorderSpec("constant", 0.0)
-        xp = extend(frame, r, BorderSpec("duplicate"), axes=(1, 2))
-        # overwrite out-of-frame ring with the constant
-        hi = jnp.arange(-r, H + r)
-        wi = jnp.arange(-r, W + r)
-        mh = ((hi >= 0) & (hi < H))[None, :, None, None]
-        mw = ((wi >= 0) & (wi < W))[None, None, :, None]
-        xp = jnp.where(mh & mw, xp, border_constant.astype(xp.dtype))
-    elif border_policy == "neglect":
-        xp = frame
-    else:
-        xp = extend(frame, r, spec, axes=(1, 2))
+    xp = _extend_policy(frame, r, border_policy, border_constant)
     Ho, Wo = out_shape(H, W, w, spec)
     y = _FORM_FNS[form](xp, coeffs, Ho, Wo)
     return _un_nhwc(y, add_b, add_c)
 
 
+@functools.partial(jax.jit, static_argnames=("border_policy",))
+def _filter2d_sep_impl(frame: jax.Array, u: jax.Array, v: jax.Array, *,
+                       border_policy: str, border_constant: jax.Array
+                       ) -> jax.Array:
+    """Separable fast path: a w-tap column pass then a w-tap row pass
+    (2w MACs/pixel instead of w²). u filters rows (vertical), v columns."""
+    spec = BorderSpec(border_policy)
+    frame, add_b, add_c = _as_nhwc(frame)
+    B, H, W, C = frame.shape
+    w = u.shape[0]
+    r = (w - 1) // 2
+    xp = _extend_policy(frame, r, border_policy, border_constant)
+    Ho, Wo = out_shape(H, W, w, spec)
+    u = u.astype(xp.dtype)
+    v = v.astype(xp.dtype)
+    h = None                              # horizontal (column) pass: w MACs
+    for j in range(w):
+        t = jax.lax.dynamic_slice_in_dim(xp, j, Wo, axis=2) * v[j]
+        h = t if h is None else h + t
+    y = None                              # vertical (row) pass: w MACs
+    for i in range(w):
+        t = jax.lax.dynamic_slice_in_dim(h, i, Ho, axis=1) * u[i]
+        y = t if y is None else y + t
+    return _un_nhwc(y, add_b, add_c)
+
+
+def resolve_separable(frame_dtype, coeffs, separable,
+                      tol: float = 1e-5):
+    """Resolve the ``separable`` knob to ``(u, v)`` or ``None`` (2D path).
+
+    ``separable=False`` never decomposes; ``True`` requires a concrete
+    rank-1 float filter (raises otherwise); ``"auto"`` decomposes when it
+    can and silently falls back to the full w² form when it can't (traced
+    coefficients, fixed-point frames, non-separable filters).
+    """
+    if separable is False or separable is None:
+        return None
+    if separable not in (True, "auto"):
+        raise ValueError(
+            f"separable must be 'auto', True or False; got {separable!r}")
+    strict = separable is True
+    if jnp.issubdtype(jnp.dtype(frame_dtype), jnp.integer):
+        if strict:
+            raise NotImplementedError(
+                "separable fast path is float-only; fixed-point frames "
+                "accumulate exactly in int32 via the w² form")
+        return None
+    if isinstance(coeffs, jax.core.Tracer):
+        if strict:
+            raise ValueError("separable=True needs concrete coefficients "
+                             "(SVD rank detection runs at trace time)")
+        return None
+    uv = decompose_separable(np.asarray(coeffs), tol=tol)
+    if uv is None and strict:
+        raise ValueError("separable=True but the filter is not rank-1 "
+                         "within tol; use separable='auto' to fall back")
+    return uv
+
+
 def filter2d(frame: jax.Array, coeffs: jax.Array, *, form: str = "direct",
-             border: BorderSpec = BorderSpec("mirror")) -> jax.Array:
+             border: BorderSpec = BorderSpec("mirror"),
+             separable=False) -> jax.Array:
     """Apply a runtime `w×w` filter to a frame.
 
     frame: [H,W] | [H,W,C] | [B,H,W,C]. coeffs: [w,w] (traced operand).
     Output keeps the frame size unless ``border.policy == 'neglect'``
     (paper: Direct keeps H×W, Transposed/neglect shrinks by w−1).
+
+    ``separable``: ``"auto"`` detects rank-1 filters (gaussian, box, …) by
+    SVD and routes them through two 1D passes at 2w MACs/pixel; ``True``
+    requires separability (raises otherwise); ``False`` (default) always
+    runs the full w² form.
     """
     if form not in FORMS:
         raise ValueError(f"unknown form {form!r}; choose from {FORMS}")
+    uv = resolve_separable(frame.dtype, coeffs, separable)
+    if uv is not None:
+        return _filter2d_sep_impl(
+            frame, jnp.asarray(uv[0]), jnp.asarray(uv[1]),
+            border_policy=border.policy,
+            border_constant=jnp.asarray(border.constant))
     return _filter2d_impl(frame, coeffs, form=form,
                           border_policy=border.policy,
                           border_constant=jnp.asarray(border.constant))
@@ -249,9 +327,15 @@ def filter2d_xla(frame: jax.Array, coeffs: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def macs_per_pixel(w: int, form: str) -> int:
-    """MXU/VPU MAC issue count per output pixel (paper Table II analogue)."""
-    return w * w  # all forms issue w² MACs; they differ in reduction shape
+def macs_per_pixel(w: int, form: str = "direct",
+                   separable: bool = False) -> int:
+    """MXU/VPU MAC issue count per output pixel (paper Table II analogue).
+
+    All 2D forms issue w² MACs (they differ in reduction shape); the
+    separable fast path issues 2w (one w-tap pass per axis)."""
+    if separable:
+        return 2 * w
+    return w * w
 
 
 def reduction_depth(w: int, form: str) -> int:
@@ -269,10 +353,14 @@ def reduction_depth(w: int, form: str) -> int:
     raise ValueError(form)
 
 
-def startup_latency_rows(w: int, form: str) -> float:
+def startup_latency_rows(w: int, form: str,
+                         separable: bool = False) -> float:
     """Rows that must stream in before the first output row (Table III
     analogue): direct-form needs (w−1)/2 +border rows; transposed/neglect
-    needs w−1 (it discards borders, first valid row is row w−1)."""
+    needs w−1 (it discards borders, first valid row is row w−1).
+    Separability changes the MAC count, not the stencil's vertical
+    support — the row pass still spans w input rows, so latency depends
+    only on the form."""
     if form == "transposed":
         return float(w - 1)
     return (w - 1) / 2.0

@@ -1,0 +1,10 @@
+"""Version compat for the Pallas TPU kernel modules.
+
+jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` across
+0.4.x/0.5.x; resolve whichever this toolchain ships so every kernel
+module shares one shim.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -1,2 +1,3 @@
-from repro.kernels.filter2d.ops import filter2d_pallas
+from repro.kernels.filter2d.kernel import stream_vmem_working_set
+from repro.kernels.filter2d.ops import filter2d_pallas, filter_bank_pallas
 from repro.kernels.filter2d.ref import filter2d_ref

@@ -1,29 +1,40 @@
 """Pallas TPU kernels for streaming 2D spatial filtering (paper §II + §III).
 
-Two kernels, mirroring the paper's two buffering regimes:
+Two buffering regimes, mirroring the paper's:
 
-``small``   — the *pixel cache* regime: the whole (border-extended) frame is
-              VMEM-resident; one grid step computes the full output. Valid
-              for frames up to the VMEM budget (the paper's "window cache"
-              generalised to a frame cache).
+``small``   — the *pixel cache* regime: each (border-extended) plane is
+              VMEM-resident; one grid step computes one plane × one filter.
+              Valid for frames up to the VMEM budget (the paper's "window
+              cache" generalised to a frame cache).
 
-``stream``  — the *row buffer* regime: grid steps stream row strips
-              sequentially (``dimension_semantics=('arbitrary',)``); a VMEM
-              scratch carries the previous strip across steps (the paper's
-              (w−1)-row buffer — we carry a full strip so output blocks stay
-              tile-aligned). Step 0 only primes the buffer (the paper's
-              *priming* phase); one extra grid step at the end drains the
-              last strip (*flushing*). Output strip i is written at grid
-              step i+1 — overlapped priming & flushing, no stall.
+``stream``  — the *row buffer* regime, generalised to **2D tiling**: the
+              grid is (planes, column tiles, row strips + 1, filters) and
+              streams row strips sequentially within each lane-aligned
+              column tile (``dimension_semantics=('arbitrary', …)``); a
+              VMEM scratch carries the previous strip across steps (the
+              paper's (w−1)-row buffer — we carry a full strip so output
+              blocks stay tile-aligned). Step i=0 of each tile only primes
+              the buffer (the paper's *priming* phase); one extra grid step
+              at the end drains the last strip (*flushing*). Output strip i
+              is written at grid step i+1 — overlapped priming & flushing,
+              no stall. The per-step VMEM working set is bounded by
+              strip_h × tile_w (see :func:`stream_vmem_working_set`),
+              independent of frame height AND width — arbitrary-width (8K)
+              frames stream under a fixed strip budget.
 
-Both kernels compute a VALID convolution over a border-extended input that
-``ops.py`` prepares with the lean index remap of ``core/borders`` (a gather,
-never a padded HBM round-trip). Coefficients are a runtime operand in VMEM
-(the paper's coefficient file): one compiled kernel serves any filter.
+Both regimes fold **batch/channel planes and the filter bank into the
+kernel grid** (no outer ``vmap``): input planes are [M, …], coefficients
+[N, w, w], outputs [M, N, …]. Column-tile halos are remapped tile-locally
+by ``ops.py`` with the lean index mux of ``core/borders.gather_rows`` (a
+gather, never a padded HBM round-trip). Coefficients are a runtime operand
+in VMEM (the paper's coefficient file): one compiled kernel serves any
+filter.
 
-The reduction over the w² taps supports the paper's four layouts
-(direct / transposed / tree / compress) — see ``core/filter2d`` for the
-FPGA↔TPU mapping.
+The w² reduction supports the paper's four layouts (direct / transposed /
+tree / compress) — see ``core/filter2d`` for the FPGA↔TPU mapping — plus a
+**separable fast path**: rank-1 filters run a fused w-tap column pass +
+w-tap row pass (2w MACs/pixel instead of w²), the RIPL/Campos
+decomposition expressed as one streaming kernel.
 """
 from __future__ import annotations
 
@@ -34,6 +45,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.kernels._compat import CompilerParams
 
 LANE = 128  # TPU lane width: last-dim alignment target
 
@@ -78,98 +90,184 @@ def _reduce_taps(ext, coeffs, Ho: int, Wo: int, w: int, form: str):
     raise ValueError(form)
 
 
+def _reduce_separable(ext, u, v, Ho: int, Wo: int, w: int):
+    """Fused separable reduction: w-tap column pass then w-tap row pass.
+
+    ext: [Ho+2r, Wo+2r(+pad)]; u/v: [w] row/column factors. 2w MACs/pixel
+    (the column pass runs on Ho+2r rows, amortised over the strip).
+    """
+    h = None
+    for j in range(w):                   # column (horizontal) pass
+        t = ext[:, j:j + Wo] * v[j]
+        h = t if h is None else h + t
+    y = None
+    for i in range(w):                   # row (vertical) pass
+        t = h[i:i + Ho] * u[i]
+        y = t if y is None else y + t
+    return y
+
+
 # ---------------------------------------------------------------------------
-# small kernel: frame-resident (pixel-cache regime)
+# small kernel: plane-resident (pixel-cache regime), grid = (planes, filters)
 # ---------------------------------------------------------------------------
 
 
 def _small_kernel(x_ref, c_ref, o_ref, *, w: int, form: str):
-    ext = x_ref[...]
-    Ho, Wo = o_ref.shape
-    o_ref[...] = _reduce_taps(ext, c_ref[...], Ho, Wo, w, form)
+    ext = x_ref[0]
+    Ho, Wo = o_ref.shape[-2:]
+    o_ref[0, 0] = _reduce_taps(ext, c_ref[0], Ho, Wo, w, form)
 
 
-def filter2d_small(x_ext: jax.Array, coeffs: jax.Array, out_shape: Tuple[int, int],
-                   *, form: str = "direct", interpret: bool = True) -> jax.Array:
-    """x_ext: [Ho+2r, Wo+2r(+pad)] extended frame. Returns [Ho, Wo_pad]."""
+def _small_sep_kernel(x_ref, uv_ref, o_ref, *, w: int):
+    ext = x_ref[0]
+    Ho, Wo = o_ref.shape[-2:]
+    o_ref[0, 0] = _reduce_separable(ext, uv_ref[0, 0], uv_ref[0, 1],
+                                    Ho, Wo, w)
+
+
+def filter2d_small(x_ext: jax.Array, coeffs: jax.Array,
+                   out_shape: Tuple[int, int], *, form: str = "direct",
+                   interpret: bool = True) -> jax.Array:
+    """x_ext: [M, Ho+2r, Wo+2r(+pad)] extended planes; coeffs: [N, w, w]
+    (or [N, 2, w] row/col factors when ``form == 'separable'``).
+    Returns [M, N, Ho, Wo_pad] — plane and filter dims are grid dims.
+    """
     w = coeffs.shape[-1]
+    M, He, Wp = x_ext.shape
+    N = coeffs.shape[0]
     Ho, Wo = out_shape
+    if form == "separable":
+        body = functools.partial(_small_sep_kernel, w=w)
+        c_block = (1, 2, w)
+    else:
+        body = functools.partial(_small_kernel, w=w, form=form)
+        c_block = (1, w, w)
     return pl.pallas_call(
-        functools.partial(_small_kernel, w=w, form=form),
-        out_shape=jax.ShapeDtypeStruct((Ho, Wo), x_ext.dtype),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM),
-                  pl.BlockSpec(memory_space=pltpu.VMEM)],
-        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        body,
+        out_shape=jax.ShapeDtypeStruct((M, N, Ho, Wo), x_ext.dtype),
+        grid=(M, N),
+        in_specs=[
+            pl.BlockSpec((1, He, Wp), lambda m, f: (m, 0, 0)),
+            pl.BlockSpec(c_block, lambda m, f: (f, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Ho, Wo), lambda m, f: (m, f, 0, 0)),
         interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
         name=f"filter2d_small_{form}",
     )(x_ext, coeffs)
 
 
 # ---------------------------------------------------------------------------
-# stream kernel: row-strip streaming with a carried line buffer
+# stream kernel: 2D-tiled row-strip streaming with a carried line buffer
 # ---------------------------------------------------------------------------
 
 
 def _stream_kernel(x_ref, c_ref, o_ref, buf_ref, *, w: int, S: int,
                    form: str):
-    """Grid step i reads strip i (clamped), writes output strip i−1.
+    """Grid step (m, j, i, f) reads strip i of column tile j (clamped),
+    writes output strip i−1 for filter f.
 
-    buf_ref is the line buffer: the previous strip (S rows), persisted in
-    VMEM across grid steps. Priming at i=0, flushing at i=n.
+    buf_ref is the line buffer: the previous strip (S rows of the tile),
+    persisted in VMEM across grid steps. Priming at i=0 (per tile),
+    flushing at i=n. The filter dim is INNERMOST and the input block
+    index is independent of f, so Pallas's revisit elision fetches each
+    strip once and reuses it for all N filters (read-once bank); the
+    line buffer advances only on the LAST f step, since earlier f steps
+    of strip i still need strip i−1 in it.
     """
-    i = pl.program_id(0)
     r = (w - 1) // 2
-    cur = x_ref[...]                        # [S, Wp] strip i (or last, clamped)
+    cur = x_ref[0, 0]                       # [S, Twh] strip i (or last)
     prev = buf_ref[...]
 
-    # ext rows [(i-1)·S, (i-1)·S + S + 2r) of the extended frame
+    # ext rows [(i-1)·S, (i-1)·S + S + 2r) of the tile's extended plane
     ext = jnp.concatenate([prev, cur], axis=0)[: S + 2 * r]
-    Wo = o_ref.shape[1]
-    y = _reduce_taps(ext, c_ref[...], S, Wo, w, form)
+    Tw = o_ref.shape[-1]
+    if form == "separable":
+        y = _reduce_separable(ext, c_ref[0, 0], c_ref[0, 1], S, Tw, w)
+    else:
+        y = _reduce_taps(ext, c_ref[0], S, Tw, w, form)
 
     # i = 0 is the priming step: block 0 is revisited (and overwritten) at
     # i = 1, so an unconditional store is safe and branch-free — the paper's
     # "no stall / regular dataflow" property.
-    o_ref[...] = y
-    buf_ref[...] = cur
+    o_ref[0, 0, 0] = y
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _advance_line_buffer():
+        buf_ref[...] = cur
 
 
-def filter2d_stream(x_ext: jax.Array, coeffs: jax.Array,
-                    out_shape: Tuple[int, int], *, strip_h: int = 128,
+def filter2d_stream(x_tiles: jax.Array, coeffs: jax.Array, *,
+                    strip_h: int = 128, tile_w: int = 512,
                     form: str = "direct", interpret: bool = True
                     ) -> jax.Array:
-    """Streaming filter. x_ext: [Ho+2r, Wp] (Wp lane-padded), Ho % strip_h == 0.
+    """2D-tiled streaming filter.
 
-    Grid has Ho/strip_h + 1 steps (the +1 is the flush step). VMEM working
-    set per step: 2 strips + coeffs — the row-buffer bound, independent of
-    frame height.
+    x_tiles: [M, n_ct, n_in·S, Tw + 2r (+pad)] — per-plane column tiles of
+    the row-extended frame, halos already remapped tile-locally (ops.py).
+    coeffs: [N, w, w] filter bank (or [N, 2, w] factors for
+    ``form='separable'``). Returns [M, N, n_ct, Ho_pad, tile_w] with
+    Ho_pad = (n_in·S − 2r rounded to strips).
+
+    Grid is (M, n_ct, n+1, N) — the +1 is the flush step; the filter dim
+    is innermost so each fetched strip serves all N filters before the
+    stream advances (the coefficient file read-once property). VMEM
+    working set per step: 2 strip tiles + an output tile + coeffs — the
+    row-buffer bound, independent of both frame height and width.
     """
     w = coeffs.shape[-1]
     r = (w - 1) // 2
-    Ho, Wo = out_shape
-    Wp = x_ext.shape[1]
+    M, n_ct, Hs, Twh = x_tiles.shape
+    N = coeffs.shape[0]
     S = strip_h
-    assert Ho % S == 0 and S >= 2 * r, (Ho, S, r)
-    n = Ho // S
-    # strips of the extended frame: strip i = ext rows [i·S, (i+1)·S); the
-    # final 2r halo rows are folded into the flush step's clamped re-read,
-    # so x_ext must hold Ho + 2r rows and we stream ceil over S.
-    n_in = (Ho + 2 * r + S - 1) // S
+    Tw = tile_w
+    assert Hs % S == 0 and S >= 2 * r, (Hs, S, r)
+    n_in = Hs // S
+    # output strips: strip i covers ext rows [i·S, i·S + S + 2r); the last
+    # 2r halo rows are folded into the flush step's clamped re-read.
+    n = (Hs - 2 * r) // S
+    Ho_pad = n * S
 
-    grid = (n + 1,)
+    c_block = (1, 2, w) if form == "separable" else (1, w, w)
+    grid = (M, n_ct, n + 1, N)
     return pl.pallas_call(
         functools.partial(_stream_kernel, w=w, S=S, form=form),
-        out_shape=jax.ShapeDtypeStruct((Ho, Wp - 2 * r), x_ext.dtype),
+        out_shape=jax.ShapeDtypeStruct((M, N, n_ct, Ho_pad, Tw),
+                                       x_tiles.dtype),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((S, Wp), lambda i: (jnp.minimum(i, n_in - 1), 0)),
-            pl.BlockSpec(memory_space=pltpu.VMEM),  # coefficient file
+            pl.BlockSpec((1, 1, S, Twh),
+                         lambda m, j, i, f: (m, j, jnp.minimum(i, n_in - 1),
+                                             0)),
+            pl.BlockSpec(c_block, lambda m, j, i, f: (f, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((S, Wp - 2 * r),
-                               lambda i: (jnp.maximum(i - 1, 0), 0)),
-        scratch_shapes=[pltpu.VMEM((S, Wp), x_ext.dtype)],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, S, Tw),
+            lambda m, j, i, f: (m, f, j, jnp.maximum(i - 1, 0), 0)),
+        scratch_shapes=[pltpu.VMEM((S, Twh), x_tiles.dtype)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",) * 4),
         name=f"filter2d_stream_{form}",
-    )(x_ext, coeffs)
+    )(x_tiles, coeffs)
+
+
+def stream_vmem_working_set(strip_h: int, tile_w: int, w: int,
+                            dtype_bytes: int = 4, *,
+                            separable: bool = False,
+                            num_filters: int = 1) -> int:
+    """Bytes resident in VMEM per stream grid step (the row-buffer bound).
+
+    Input strip tile + carried line buffer + output tile + coefficient
+    file. A function of (strip_h, tile_w, w) ONLY — never of the frame
+    dimensions; this is the invariant the 2D tiling exists to provide.
+    """
+    r = (w - 1) // 2
+    twh = tile_w + 2 * r
+    twh += (-twh) % LANE                 # lane padding, as ops.py lays out
+    in_tile = strip_h * twh * dtype_bytes
+    line_buf = strip_h * twh * dtype_bytes
+    out_tile = strip_h * tile_w * dtype_bytes
+    coeff = num_filters * (2 * w if separable else w * w) * dtype_bytes
+    return in_tile + line_buf + out_tile + coeff

@@ -2,10 +2,21 @@
 
 The wrapper owns everything the FPGA control unit owned:
   * border extension as a lean index remap (``core/borders.gather_rows``) —
-    fused by XLA into the kernel's input stream, never a padded HBM pass;
-  * lane alignment: W padded to a multiple of 128 (MXU/VPU lane width);
-  * strip sizing: Ho padded to the strip grid, sized for the VMEM budget;
-  * form/regime dispatch (frame-resident ``small`` vs streaming ``stream``).
+    one gather per axis, no w²-sized intermediates. The tiled stream
+    layout IS materialized ahead of the kernel (halo columns duplicated,
+    ~2r/tile_w ≈ 2% extra at the defaults), one HBM pass the kernel then
+    streams once; folding that gather into the kernel's own DMA is an
+    open item (ROADMAP);
+  * lane alignment: column tiles padded to a multiple of 128 (MXU/VPU lane
+    width);
+  * strip/tile sizing: Ho padded to the strip grid, W split into
+    lane-aligned column tiles with tile-local halo remap, so the per-step
+    VMEM working set is bounded by strip_h × tile_w regardless of frame
+    dimensions (8K-wide frames stream under the same budget as VGA);
+  * plane folding: batch/channel (and the filter bank) become kernel grid
+    dimensions — no outer ``vmap`` of a 2D kernel;
+  * form/regime dispatch (frame-resident ``small`` vs streaming ``stream``)
+    and the separable fast path (``separable='auto'|True|False``).
 
 On non-TPU backends kernels run in ``interpret=True`` mode (bit-accurate
 Python execution of the kernel body) — the TPU lowering is exercised by the
@@ -20,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.borders import BorderSpec, gather_rows
+from repro.core.filter2d import resolve_separable
 from repro.kernels.filter2d import kernel as K
 
 LANE = 128
@@ -29,14 +41,37 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _extend_2d(frame: jax.Array, r: int, spec: BorderSpec) -> jax.Array:
-    """[H, W] -> [H+2r, W+2r] under the border policy (index remap)."""
-    if spec.policy == "neglect" or r == 0:
-        return frame
-    hi = jnp.arange(-r, frame.shape[0] + r)
-    wi = jnp.arange(-r, frame.shape[1] + r)
-    frame = gather_rows(frame, hi, spec, axis=0)
-    return gather_rows(frame, wi, spec, axis=1)
+def _fold_planes(frame: jax.Array):
+    """[H,W] | [H,W,C] | [B,H,W,C] -> ([M,H,W] planes, layout tag).
+
+    The plane dim M = B·C rides the kernel grid (no vmap); the tag lets
+    ``_unfold`` restore the caller's layout from the kernel's [M,N,Ho,Wo].
+    """
+    if frame.ndim == 2:
+        return frame[None], ("hw",)
+    if frame.ndim == 3:                    # [H, W, C]
+        C = frame.shape[2]
+        return jnp.transpose(frame, (2, 0, 1)), ("hwc", C)
+    if frame.ndim == 4:                    # [B, H, W, C]
+        B, _, _, C = frame.shape
+        planes = jnp.transpose(frame, (0, 3, 1, 2)).reshape(
+            B * C, frame.shape[1], frame.shape[2])
+        return planes, ("bhwc", B, C)
+    raise ValueError(frame.shape)
+
+
+def _unfold(y: jax.Array, tag, keep_bank: bool) -> jax.Array:
+    """y: [M, N, Ho, Wo] -> caller layout (bank dim last when kept)."""
+    if tag[0] == "hw":
+        y = y[0]                                   # [N, Ho, Wo]
+        y = jnp.transpose(y, (1, 2, 0))            # [Ho, Wo, N]
+    elif tag[0] == "hwc":
+        y = jnp.transpose(y, (2, 3, 0, 1))         # [Ho, Wo, C, N]
+    else:
+        B, C = tag[1], tag[2]
+        y = y.reshape(B, C, *y.shape[1:])          # [B, C, N, Ho, Wo]
+        y = jnp.transpose(y, (0, 3, 4, 1, 2))      # [B, Ho, Wo, C, N]
+    return y if keep_bank else y[..., 0]
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -49,68 +84,155 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, cfg)
 
 
+def _extend_rows(planes: jax.Array, idx_lo: int, total: int, r: int,
+                 H: int, spec: BorderSpec) -> jax.Array:
+    """Gather ``total`` rows starting at extended-row ``idx_lo``; indices
+    beyond the legal remap range (bottom strip padding) clamp to the last
+    legal extended row — they only feed discarded output rows."""
+    raw = jnp.arange(idx_lo, idx_lo + total)
+    if spec.policy == "neglect":
+        return jnp.take(planes, jnp.clip(raw, 0, H - 1), axis=1)
+    return gather_rows(planes, jnp.clip(raw, -r, H - 1 + r), spec, axis=1)
+
+
+def _gather_col_tiles(xr: jax.Array, n_ct: int, tile_w: int, twh_p: int,
+                      r: int, W: int, spec: BorderSpec) -> jax.Array:
+    """Tile-local column halo remap: tile j's twh_p input columns (Tw + 2r
+    + lane pad) gathered through the border mux in ONE gather.
+
+    xr: [M, rows, W] -> [M, n_ct, rows, twh_p].
+    """
+    base = jnp.arange(n_ct)[:, None] * tile_w
+    off = jnp.arange(twh_p)[None, :]
+    if spec.policy == "neglect":
+        ci = jnp.clip(base + off, 0, W - 1)
+        xt = jnp.take(xr, ci.reshape(-1), axis=2)
+    else:
+        ci = jnp.clip(base + off - r, -r, W - 1 + r)
+        xt = gather_rows(xr, ci.reshape(-1), spec, axis=2)
+    M, rows = xr.shape[0], xr.shape[1]
+    return xt.reshape(M, rows, n_ct, twh_p).transpose(0, 2, 1, 3)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("form", "border_policy", "regime", "strip_h",
+    static_argnames=("form", "border_policy", "regime", "strip_h", "tile_w",
                      "interpret"))
-def _filter2d_pallas_2d(frame: jax.Array, coeffs: jax.Array, *, form: str,
-                        border_policy: str, regime: str, strip_h: int,
-                        interpret: bool) -> jax.Array:
+def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array, *,
+                            form: str, border_policy: str, regime: str,
+                            strip_h: int, tile_w: int,
+                            interpret: bool) -> jax.Array:
+    """planes: [M, H, W]; coeffs: [N, w, w] (or [N, 2, w] factors for
+    ``form='separable'``). Returns [M, N, Ho, Wo]."""
     spec = BorderSpec(border_policy)
-    H, W = frame.shape
+    M, H, W = planes.shape
     w = coeffs.shape[-1]
     r = (w - 1) // 2
     if spec.policy == "neglect":
         Ho, Wo = H - 2 * r, W - 2 * r
-        x_ext = frame
     else:
         Ho, Wo = H, W
-        x_ext = _extend_2d(frame, r, spec)
-    # lane alignment: pad extended width; padded cols only feed discarded
-    # output cols.
-    x_ext = _pad_to(x_ext, 1, LANE)
-    Wp = x_ext.shape[1]
+
     if regime == "small":
-        y = K.filter2d_small(x_ext, coeffs, (Ho, Wp - 2 * r), form=form,
+        # whole-plane extension + lane alignment: padded cols only feed
+        # discarded output cols.
+        x_ext = _extend_rows(planes, -r if spec.same_size else 0,
+                             Ho + 2 * r, r, H, spec)
+        if spec.same_size:
+            wi = jnp.arange(-r, W + r)
+            x_ext = gather_rows(x_ext, wi, spec, axis=2)
+        x_ext = _pad_to(x_ext, 2, LANE)
+        y = K.filter2d_small(x_ext, coeffs,
+                             (Ho, x_ext.shape[2] - 2 * r), form=form,
                              interpret=interpret)
-    elif regime == "stream":
-        S = min(strip_h, Ho)
-        Ho_pad = Ho + ((-Ho) % S)
-        # bottom rows pad with edge replication: only discarded rows read them
-        extra = Ho_pad - Ho
-        if extra:
-            x_ext = jnp.concatenate(
-                [x_ext, jnp.broadcast_to(x_ext[-1:], (extra, Wp))], axis=0)
-        y = K.filter2d_stream(x_ext, coeffs, (Ho_pad, Wp), strip_h=S,
-                              form=form, interpret=interpret)
-        y = y[:Ho]
-    else:
+        return y[..., :Wo]
+
+    if regime != "stream":
         raise ValueError(regime)
-    return y[:, :Wo]
+
+    # --- stream: row strips × lane-aligned column tiles -------------------
+    S = max(min(strip_h, Ho), 2 * r, 1)
+    Ho_pad = Ho + ((-Ho) % S)
+    n_in = (Ho_pad + 2 * r + S - 1) // S
+    # rows of the extended plane, padded to whole strips (padding rows only
+    # feed output rows >= Ho, which are cropped).
+    xr = _extend_rows(planes, 0 if spec.policy == "neglect" else -r,
+                      n_in * S, r, H, spec)
+    Tw = min(tile_w, Wo + ((-Wo) % LANE))
+    Tw += (-Tw) % LANE                    # lane-aligned column tiles
+    n_ct = -(-Wo // Tw)
+    twh = Tw + 2 * r
+    twh_p = twh + ((-twh) % LANE) if r else twh
+    xt = _gather_col_tiles(xr, n_ct, Tw, twh_p, r, W, spec)
+    y = K.filter2d_stream(xt, coeffs, strip_h=S, tile_w=Tw, form=form,
+                          interpret=interpret)
+    # [M, N, n_ct, Ho_pad, Tw] -> [M, N, Ho_pad, n_ct·Tw] -> crop
+    N = coeffs.shape[0]
+    y = y.transpose(0, 1, 3, 2, 4).reshape(M, N, Ho_pad, n_ct * Tw)
+    return y[:, :, :Ho, :Wo]
+
+
+def _check_border(border: BorderSpec) -> None:
+    if border.policy == "wrap":
+        raise ValueError("wrap needs opposite-edge rows; use core.filter2d")
+    if border.policy == "constant" and border.constant != 0.0:
+        raise NotImplementedError("non-zero constant: use core.filter2d")
+
+
+def _coeff_operand(frame: jax.Array, coeffs: jax.Array, form: str,
+                   separable) -> Tuple[jax.Array, str]:
+    """Resolve the separable knob into the kernel coefficient operand:
+    [1, w, w] for the 2D forms, [1, 2, w] (u, v) for the fused fast path."""
+    uv = resolve_separable(frame.dtype, coeffs, separable)
+    if uv is None:
+        return jnp.asarray(coeffs)[None], form
+    # resolve_separable only yields factors for floating frames
+    return jnp.stack([jnp.asarray(uv[0]), jnp.asarray(uv[1])]).astype(
+        frame.dtype)[None], "separable"
 
 
 def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
                     form: str = "direct",
                     border: BorderSpec = BorderSpec("mirror"),
                     regime: str = "stream", strip_h: int = 128,
+                    tile_w: int = 512, separable=False,
                     interpret: Optional[bool] = None) -> jax.Array:
     """Pallas-kernel 2D filter. frame: [H,W] | [H,W,C] | [B,H,W,C].
 
-    ``regime='small'`` keeps the frame VMEM-resident (pixel-cache regime);
-    ``'stream'`` row-streams with a carried line buffer (row-buffer regime).
+    ``regime='small'`` keeps each plane VMEM-resident (pixel-cache regime);
+    ``'stream'`` streams row strips × column tiles with a carried line
+    buffer (row-buffer regime) — the VMEM working set is bounded by
+    ``strip_h × tile_w`` for any frame size. Batch/channel planes ride the
+    kernel grid. ``separable='auto'`` routes rank-1 filters through the
+    fused 2w-MAC row/column-pass kernel.
     """
-    if border.policy == "wrap":
-        raise ValueError("wrap needs opposite-edge rows; use core.filter2d")
-    if border.policy == "constant" and border.constant != 0.0:
-        raise NotImplementedError("non-zero constant: use core.filter2d")
+    _check_border(border)
     interpret = _default_interpret() if interpret is None else interpret
-    fn = functools.partial(_filter2d_pallas_2d, coeffs=coeffs, form=form,
-                           border_policy=border.policy, regime=regime,
-                           strip_h=strip_h, interpret=interpret)
-    if frame.ndim == 2:
-        return fn(frame)
-    if frame.ndim == 3:   # [H, W, C] -> vmap over channels
-        return jax.vmap(fn, in_axes=2, out_axes=2)(frame)
-    if frame.ndim == 4:   # [B, H, W, C]
-        return jax.vmap(jax.vmap(fn, in_axes=2, out_axes=2))(frame)
-    raise ValueError(frame.shape)
+    planes, tag = _fold_planes(frame)
+    co, form = _coeff_operand(frame, coeffs, form, separable)
+    y = _filter2d_pallas_planes(planes, co, form=form,
+                                border_policy=border.policy, regime=regime,
+                                strip_h=strip_h, tile_w=tile_w,
+                                interpret=interpret)
+    return _unfold(y, tag, keep_bank=False)
+
+
+def filter_bank_pallas(frame: jax.Array, bank: jax.Array, *,
+                       form: str = "direct",
+                       border: BorderSpec = BorderSpec("mirror"),
+                       regime: str = "stream", strip_h: int = 128,
+                       tile_w: int = 512,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Apply a bank of N filters in one kernel launch: bank [N, w, w] ->
+    output [..., N]. The filter dim is a kernel grid dimension — the input
+    tile is read once per (plane, tile, strip) and reused for all N
+    coefficient sets (the paper's coefficient file, folded into the grid).
+    """
+    _check_border(border)
+    interpret = _default_interpret() if interpret is None else interpret
+    planes, tag = _fold_planes(frame)
+    y = _filter2d_pallas_planes(planes, jnp.asarray(bank), form=form,
+                                border_policy=border.policy, regime=regime,
+                                strip_h=strip_h, tile_w=tile_w,
+                                interpret=interpret)
+    return _unfold(y, tag, keep_bank=True)

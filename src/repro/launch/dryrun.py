@@ -137,6 +137,15 @@ def shape_kind(shape_name: str) -> str:
             "decode_32k": "decode", "long_500k": "decode"}[shape_name]
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalise ``compiled.cost_analysis()`` (newer jax: dict; older jax
+    returns a one-element list of dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 # ---------------------------------------------------------------------------
 # cell runner
 # ---------------------------------------------------------------------------
@@ -155,7 +164,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     report = {
         "arch": arch, "shape": shape_name, "kind": kind,
         "mesh": "2x16x16" if multi_pod else "16x16",

@@ -135,7 +135,7 @@ def _cell_costs(rc: RunConfig, mesh, kind: str, detail: bool = False
                 ) -> Dict[str, float]:
     lowered, _ = dr.build_lowered(rc, mesh, kind)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis()
+    ca = dr.cost_analysis_dict(compiled)
     top = [] if detail else None
     dp = 1
     for ax in ("pod", "data"):
@@ -180,7 +180,7 @@ def _ssd_body_cost(mc, B: int, S: int) -> Tuple[float, float, int]:
            jax.ShapeDtypeStruct((B, c, H), f32),
            jax.ShapeDtypeStruct((B, c, N), f32),
            jax.ShapeDtypeStruct((B, c, N), f32))
-    ca = jax.jit(ssd_body).lower(h, inp).compile().cost_analysis()
+    ca = dr.cost_analysis_dict(jax.jit(ssd_body).lower(h, inp).compile())
     return float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0)), trips
 
 
@@ -194,7 +194,7 @@ def _slstm_body_cost(mc, B: int, S: int) -> Tuple[float, float, int]:
     r = jax.ShapeDtypeStruct((heads, 4, d // heads, d // heads), f32)
     b = jax.ShapeDtypeStruct((4 * d,), f32)
     fn = lambda c_, g_, r_, b_: slstm_step(c_, g_, r_, b_, heads)  # noqa:E731
-    ca = jax.jit(fn).lower(carry, g, r, b).compile().cost_analysis()
+    ca = dr.cost_analysis_dict(jax.jit(fn).lower(carry, g, r, b).compile())
     return float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0)), S
 
 
@@ -212,7 +212,8 @@ def _mlstm_body_cost(mc, B: int, S: int) -> Tuple[float, float, int]:
              jax.ShapeDtypeStruct((B, H), f32))
     inp = tuple(jax.ShapeDtypeStruct((B, c, H, dh), f32) for _ in range(3)) \
         + tuple(jax.ShapeDtypeStruct((B, c, H), f32) for _ in range(2))
-    ca = jax.jit(mlstm_chunk_body).lower(carry, inp).compile().cost_analysis()
+    ca = dr.cost_analysis_dict(
+        jax.jit(mlstm_chunk_body).lower(carry, inp).compile())
     return float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0)), trips
 
 

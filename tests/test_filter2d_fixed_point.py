@@ -1,0 +1,68 @@
+"""Fixed-point datapath (paper: B=8 pixels, DSP48 accumulates wide).
+
+int8/uint8/int16 frames multiply-accumulate in int32 and must match a
+numpy int32 oracle EXACTLY — every form × every border policy. The caller
+owns requantisation, as the FPGA datapath does."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.borders import POLICIES, BorderSpec, np_pad_mode
+from repro.core.filter2d import FORMS, filter2d
+
+
+def np_filter_int32(x, k, policy, constant=0):
+    """Reference integer filter: pad + int64 accumulate, checked into i32."""
+    r = k.shape[0] // 2
+    x = x.astype(np.int64)
+    k = k.astype(np.int64)
+    mode = np_pad_mode(policy)
+    if mode is None:                      # neglect
+        xp = x
+        H, W = x.shape[0] - 2 * r, x.shape[1] - 2 * r
+    elif mode == "constant":
+        xp = np.pad(x, r, mode="constant", constant_values=constant)
+        H, W = x.shape
+    else:
+        xp = np.pad(x, r, mode=mode)
+        H, W = x.shape
+    out = np.zeros((H, W), np.int64)
+    for i in range(k.shape[0]):
+        for j in range(k.shape[1]):
+            out += xp[i:i + H, j:j + W] * k[i, j]
+    assert np.abs(out).max() < 2 ** 31   # oracle itself must fit int32
+    return out.astype(np.int32)
+
+
+@pytest.mark.parametrize("dtype", [np.int8, np.uint8, np.int16])
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("form", FORMS)
+def test_fixed_point_matches_int32_oracle(dtype, policy, form, rng):
+    lo, hi = (0, 40) if dtype == np.uint8 else (-20, 20)
+    x = rng.integers(lo, hi, (23, 19)).astype(dtype)
+    k = rng.integers(-8, 9, (5, 5)).astype(np.int32)
+    got = filter2d(jnp.asarray(x), jnp.asarray(k), form=form,
+                   border=BorderSpec(policy))
+    assert got.dtype == jnp.int32        # accumulate & return in int32
+    want = np_filter_int32(x, k, policy)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("dtype", [np.int8, np.int16])
+def test_fixed_point_nonzero_constant(dtype, rng):
+    """Constant-border value survives the int32 cast."""
+    x = rng.integers(-10, 10, (12, 14)).astype(dtype)
+    k = rng.integers(-3, 4, (3, 3)).astype(np.int32)
+    got = filter2d(jnp.asarray(x), jnp.asarray(k),
+                   border=BorderSpec("constant", 5.0))
+    want = np_filter_int32(x, k, "constant", constant=5)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_fixed_point_wide_accumulator(rng):
+    """int16 extremes overflow int16 partial sums; int32 must not."""
+    x = np.full((9, 9), 30000, np.int16)
+    k = np.full((3, 3), 7, np.int32)
+    got = filter2d(jnp.asarray(x), jnp.asarray(k),
+                   border=BorderSpec("duplicate"))
+    assert int(np.asarray(got)[4, 4]) == 30000 * 7 * 9   # = 1,890,000 > i16

@@ -4,7 +4,6 @@ pass; streaming (row-buffer) equals the frame-resident path."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import filters
 from repro.core.borders import BorderSpec, np_pad_mode
@@ -80,11 +79,10 @@ def test_filter_bank(rng):
                                atol=2e-5)  # identity slot
 
 
-@given(sh=st.sampled_from([8, 16, 32]),
-       w=st.sampled_from([3, 5, 7]),
-       policy=st.sampled_from(["mirror", "mirror_dup", "duplicate",
-                               "constant"]))
-@settings(max_examples=25, deadline=None)
+@pytest.mark.parametrize("sh", [8, 16, 32])
+@pytest.mark.parametrize("w", [3, 5, 7])
+@pytest.mark.parametrize("policy", ["mirror", "mirror_dup", "duplicate",
+                                    "constant"])
 def test_streaming_equals_resident(sh, w, policy):
     """Property: the row-buffer streaming schedule is output-invariant."""
     rng = np.random.default_rng(42)
@@ -97,11 +95,32 @@ def test_streaming_equals_resident(sh, w, policy):
                                atol=3e-5)
 
 
+@pytest.mark.parametrize("policy", ["mirror", "mirror_dup", "duplicate",
+                                    "wrap", "constant"])
+def test_filter_bank_equals_per_filter_loop(policy, rng):
+    """One bank pass == N independent filter2d calls (every same-size
+    policy): the MXU coefficient-file path changes structure, not values."""
+    x = jnp.asarray(rng.standard_normal((20, 18)).astype(np.float32))
+    bank = jnp.stack([jnp.asarray(filters.gaussian(5)),
+                      jnp.asarray(filters.box(5)),
+                      jnp.asarray(filters.log_filter(5)),
+                      jnp.asarray(filters.identity(5))])
+    got = filter_bank(x, bank, border=BorderSpec(policy))
+    for i in range(bank.shape[0]):
+        want = filter2d(x, bank[i], border=BorderSpec(policy))
+        np.testing.assert_allclose(np.asarray(got[..., i]),
+                                   np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
 def test_unit_accounting():
-    """Paper Tables I/II analogues."""
+    """Paper Tables I/II analogues (+ the separable fast path's 2w)."""
     assert macs_per_pixel(7, "direct") == 49
+    assert macs_per_pixel(7, separable=True) == 14       # 2w fast path
+    assert macs_per_pixel(5, "tree", separable=True) == 10
     assert reduction_depth(7, "tree") == 6       # ceil(log2 49)
     assert reduction_depth(7, "direct") == 1     # systolic
     assert reduction_depth(7, "compress") == 2 + 8  # ceil(49/6)=9 groups
     assert startup_latency_rows(7, "direct") == 3.0
     assert startup_latency_rows(7, "transposed") == 6.0
+    # separability cuts MACs, not the stencil's vertical support
+    assert startup_latency_rows(7, "transposed", separable=True) == 6.0

@@ -4,7 +4,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.models import moe as moe_mod
 from repro.models.module import init_params
@@ -60,9 +59,9 @@ def test_capacity_drops_monotone(rng):
     assert n_hi == T                         # no drops at cf=8
 
 
-@given(T=st.integers(4, 40), E=st.sampled_from([2, 4, 8]),
-       K=st.sampled_from([1, 2]))
-@settings(max_examples=25, deadline=None)
+@pytest.mark.parametrize("T,E,K", [
+    (4, 2, 1), (4, 8, 2), (7, 2, 2), (12, 4, 2), (17, 8, 1), (23, 4, 1),
+    (29, 8, 2), (33, 2, 2), (40, 4, 2), (40, 8, 1)])
 def test_dispatch_slot_invariants(T, E, K):
     """Property: kept assignments land in unique slots within capacity."""
     rng = np.random.default_rng(T * 31 + E)

@@ -105,7 +105,7 @@ def test_tiny_dryrun_mesh_8dev():
                    train=TrainConfig(loss_chunk=32))
     lowered, ctx = dr.build_lowered(rc, mesh, "train")
     compiled = lowered.compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    assert dr.cost_analysis_dict(compiled).get("flops", 0) > 0
     # decode path too
     sh2 = dataclasses.replace(SHAPES["decode_32k"], seq_len=64,
                               global_batch=8)

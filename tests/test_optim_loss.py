@@ -3,7 +3,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
                          cosine_warmup, global_norm, int8_ef_compress,
@@ -52,8 +51,8 @@ def test_clip_by_global_norm(rng):
     assert float(n) > 1.0
 
 
-@given(scale=st.floats(1e-3, 1e3))
-@settings(max_examples=30, deadline=None)
+@pytest.mark.parametrize("scale", [1e-3, 1e-2, 0.1, 0.5, 1.0, 3.7, 10.0,
+                                   31.6, 1e2, 1e3])
 def test_int8_ef_roundtrip_error_bound(scale):
     """Property: quantisation error per element <= scale/254 of the max."""
     rng = np.random.default_rng(7)

@@ -1,0 +1,106 @@
+"""Separable fast path: SVD rank-1 detection, round-trip reconstruction,
+rejection of non-separable filters, and 2w-MAC path equivalence across the
+core and Pallas streaming implementations."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import filters
+from repro.core.borders import BorderSpec
+from repro.core.filter2d import filter2d, macs_per_pixel
+from repro.core.filters import decompose_separable
+from repro.kernels.filter2d import filter2d_pallas
+
+
+@pytest.mark.parametrize("name,w", [("gaussian", 3), ("gaussian", 5),
+                                    ("gaussian", 7), ("box", 3), ("box", 5),
+                                    ("box", 7)])
+def test_decompose_round_trip(name, w):
+    """outer(u, v) reconstructs the filter within tol."""
+    k = filters.PRESETS[name](w)
+    uv = decompose_separable(k, tol=1e-5)
+    assert uv is not None
+    u, v = uv
+    np.testing.assert_allclose(np.outer(u, v), k, rtol=1e-5, atol=1e-6)
+
+
+def test_sobel_is_separable():
+    """sobel_x = outer([1,2,1], [-1,0,1]) — rank-1, must be accepted."""
+    uv = decompose_separable(filters.sobel_x())
+    assert uv is not None
+    np.testing.assert_allclose(np.outer(*uv), filters.sobel_x(), atol=1e-5)
+
+
+@pytest.mark.parametrize("kern", [filters.laplacian(), filters.sharpen(),
+                                  filters.motion_blur(5),
+                                  filters.log_filter(5)])
+def test_non_separable_rejected(kern):
+    """laplacian/sharpen/diagonal-motion-blur/LoG are full-rank: rejected."""
+    assert decompose_separable(kern, tol=1e-5) is None
+
+
+def test_decompose_rejects_non_square():
+    with pytest.raises(ValueError):
+        decompose_separable(np.ones((3, 5), np.float32))
+
+
+@pytest.mark.parametrize("name", ["gaussian", "box", "motion_blur"])
+@pytest.mark.parametrize("w", [3, 5, 7])
+def test_core_auto_matches_full_2d(name, w, rng):
+    """Acceptance: separable='auto' ≡ the full w² form within 1e-5 for the
+    rank-1 presets (motion_blur is full-rank — auto falls back, still ≡)."""
+    x = jnp.asarray(rng.standard_normal((33, 47)).astype(np.float32))
+    k = jnp.asarray(filters.PRESETS[name](w))
+    want = filter2d(x, k)
+    got = filter2d(x, k, separable="auto")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("policy", ["mirror", "mirror_dup", "duplicate",
+                                    "wrap", "constant", "neglect"])
+def test_core_separable_every_policy(policy, rng):
+    x = jnp.asarray(rng.standard_normal((26, 31)).astype(np.float32))
+    k = jnp.asarray(filters.gaussian(5))
+    want = filter2d(x, k, border=BorderSpec(policy))
+    got = filter2d(x, k, border=BorderSpec(policy), separable=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_separable_true_raises_on_full_rank():
+    x = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        filter2d(x, jnp.asarray(filters.laplacian()), separable=True)
+
+
+def test_separable_fixed_point_falls_back(rng):
+    """int frames keep the exact int32 w² path under 'auto'; strict raises."""
+    x = jnp.asarray(rng.integers(-10, 10, (12, 12)).astype(np.int8))
+    k = jnp.asarray(np.ones((3, 3), np.int32))
+    got = filter2d(x, k, separable="auto")
+    want = filter2d(x, k)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with pytest.raises(NotImplementedError):
+        filter2d(x, k, separable=True)
+
+
+@pytest.mark.parametrize("regime", ["small", "stream"])
+@pytest.mark.parametrize("w", [3, 5, 7])
+def test_pallas_separable_matches_core(regime, w, rng):
+    """The fused row/col-pass streaming kernel ≡ core, incl. multi-tile."""
+    x = jnp.asarray(rng.standard_normal((50, 300)).astype(np.float32))
+    k = jnp.asarray(filters.gaussian(w))
+    want = filter2d(x, k)
+    got = filter2d_pallas(x, k, regime=regime, strip_h=16, tile_w=128,
+                          separable=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_separable_macs_accounting():
+    """2w MACs/pixel for the separable path vs w² for the 2D forms."""
+    for w in (3, 5, 7):
+        assert macs_per_pixel(w, separable=True) == 2 * w
+        assert macs_per_pixel(w, "direct") == w * w

@@ -4,7 +4,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.models.ssm import ssd_chunked, ssd_step
 from repro.models.xlstm import (_mlstm_parallel, _mlstm_step,
@@ -104,8 +103,7 @@ def test_mlstm_chunkwise_state_matches_step_replay(mlstm_inputs):
                                    atol=3e-4)
 
 
-@given(scale=st.floats(0.1, 3.0))
-@settings(max_examples=10, deadline=None)
+@pytest.mark.parametrize("scale", [0.1, 0.3, 0.7, 1.0, 1.5, 2.0, 2.5, 3.0])
 def test_mlstm_stability_property(scale):
     """Property: outputs stay finite under extreme gate magnitudes (the
     stabilised-exponential invariant the paper's m-state exists for)."""
