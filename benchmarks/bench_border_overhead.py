@@ -3,7 +3,15 @@
 FPGA: extra registers/LUTs/muxes per policy. TPU: extra HLO flops/bytes
 and wall time of the lean index-remap vs the no-policy (neglect) filter —
 the claim to reproduce is that overlapped priming/flushing (here: remap
-fused into the stream) costs little and never stalls (no extra pass)."""
+fused into the stream) costs little and never stalls (no extra pass).
+
+Second table: the Pallas halo engine's form × border matrix — every policy
+(wrap and constant included) resolved in-kernel, with the analytic HBM
+bytes/pixel from the halo plan's read amplification (≈1× frame in + 1×
+out; the pre-materialized layout this replaced paid an extra read+write
+frame pass). Wall time is interpret-mode CPU — trajectory signal only;
+pixels/s on real HW is HBM-bound (see bench_throughput).
+"""
 from __future__ import annotations
 
 import jax
@@ -13,12 +21,15 @@ import numpy as np
 from benchmarks.common import hlo_costs, row, time_call
 from repro.core import filters
 from repro.core.borders import SAME_SIZE_POLICIES, BorderSpec
-from repro.core.filter2d import filter2d
+from repro.core.filter2d import FORMS, filter2d
+from repro.kernels.filter2d import (filter2d_pallas, make_plan,
+                                    read_amplification)
 
 H, W = 480, 640
+PH, PW = 128, 256        # pallas interpret-mode frame (kept CI-small)
 
 
-def run():
+def core_rows():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((H, W)).astype(np.float32))
     k = jnp.asarray(filters.gaussian(7))
@@ -42,3 +53,33 @@ def run():
             f"overhead={us / max(base_us, 1e-9):.2f};"
             f"bytes_overhead={costs['bytes'] / base_costs['bytes']:.3f}"))
     return out
+
+
+def pallas_halo_rows():
+    """pixels/s + HBM bytes/pixel per form × border, in-kernel halo path."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((PH, PW)).astype(np.float32))
+    k = jnp.asarray(filters.gaussian(5))
+    strip_h, tile_w = 64, 128
+    out = []
+    for form in FORMS:
+        for pol in ("neglect",) + SAME_SIZE_POLICIES:
+            spec = BorderSpec(pol)
+            fn = lambda a, b, f=form, s=spec: filter2d_pallas(
+                a, b, form=f, border=s, regime="stream",
+                strip_h=strip_h, tile_w=tile_w)
+            us = time_call(fn, x, k)
+            plan = make_plan(PH, PW, 5, spec, strip_h, tile_w)
+            amp = read_amplification(plan)
+            dtype_bytes = 4
+            bytes_pp = dtype_bytes * (amp + 1.0)   # read-once in + out
+            out.append(row(
+                f"pallas_halo/{form}/{pol}", us,
+                f"pixels_per_s={PH * PW / (us * 1e-6):.3e};"
+                f"hbm_bytes_per_pixel={bytes_pp:.2f};"
+                f"read_amplification={amp:.3f}"))
+    return out
+
+
+def run():
+    return core_rows() + pallas_halo_rows()

@@ -1,21 +1,56 @@
 """Benchmark harness: one module per paper table (+ LM roofline summary).
 
   PYTHONPATH=src python -m benchmarks.run [--only <substr>] [--smoke]
+                                          [--json BENCH_out.json]
 
 ``--smoke`` is the CI mode: filter-path modules only, reduced timing
 iterations — a fast end-to-end exercise of every bench code path on the
 CPU-interpret backend. Prints ``name,us_per_call,derived`` CSV.
+
+``--json PATH`` additionally writes a machine-readable trajectory record:
+every CSV row parsed into ``{"name", "us_per_call", <derived metrics>}``
+(numbers as numbers), plus run metadata — the ``BENCH_*.json`` artifact CI
+uploads so throughput (pixels/s, HBM bytes/pixel per form × border) can be
+tracked across commits instead of eyeballed in logs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
+import time
+
+
+def _parse_derived(derived: str):
+    out = {}
+    for item in derived.split(";"):
+        if not item or "=" not in item:
+            continue
+        key, val = item.split("=", 1)
+        try:
+            out[key] = float(val)
+        except ValueError:
+            out[key] = val
+    return out
+
+
+def _row_record(line: str):
+    name, us, derived = line.split(",", 2)
+    try:
+        rec = {"name": name, "us_per_call": float(us)}
+    except ValueError:
+        return {"name": name, "error": derived or us}
+    rec.update(_parse_derived(derived))
+    return rec
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH_*.json trajectory record here")
     args = ap.parse_args(argv)
 
     from benchmarks import common
@@ -38,15 +73,38 @@ def main(argv=None) -> None:
                                "throughput")]
     print("name,us_per_call,derived")
     failures = 0
+    records = []
     for name, mod in modules:
         if args.only and args.only not in name:
             continue
         try:
             for line in mod.run():
                 print(line)
+                records.append(_row_record(line))
         except Exception as e:  # noqa: BLE001
             failures += 1
-            print(f"{name},-1,ERROR={type(e).__name__}:{e}")
+            line = f"{name},-1,ERROR={type(e).__name__}:{e}"
+            print(line)
+            records.append({"name": name, "error": f"{type(e).__name__}:{e}"})
+
+    if args.json:
+        import jax
+        payload = {
+            "schema": "bench_trajectory_v1",
+            "created_unix": time.time(),
+            "smoke": args.smoke,
+            "only": args.only,
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "failures": failures,
+            "rows": records,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        print(f"# wrote {len(records)} records -> {args.json}",
+              file=sys.stderr)
+
     if failures:
         sys.exit(1)
 

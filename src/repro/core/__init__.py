@@ -1,13 +1,16 @@
 """The paper's contribution: high-throughput 2D spatial filtering, TPU-native.
 
 Submodules:
+  border_spec  — the policy-neutral BorderSpec + aliases (paper Table IV)
   borders      — border policies as lean index remaps (paper §III)
   filters      — runtime coefficient file + preset bank (paper §I/§II)
   filter2d     — direct/transposed/tree/compress forms (paper §II)
   streaming    — row-strip streaming executor with carried row buffer
   distributed  — shard_map halo exchange (the row buffer, distributed)
 """
-from repro.core.borders import BorderSpec, POLICIES, SAME_SIZE_POLICIES
+from repro.core.border_spec import (ALIASES, BorderSpec, POLICIES,
+                                    SAME_SIZE_POLICIES, np_pad_mode,
+                                    out_shape)
 from repro.core.filter2d import (FORMS, filter2d, filter2d_xla, filter_bank,
                                  macs_per_pixel, reduction_depth)
 from repro.core.filters import (CoefficientFile, decompose_separable,

@@ -9,49 +9,34 @@ The TPU translation of that principle: border handling must never force a
 **padded copy of the frame through HBM** (the moral equivalent of stalling
 the stream). Every policy here is expressed as an *index remap*
 ``map_index(i, n) -> j in [0, n)`` plus, for ``constant``, a validity mask.
-Consumers (``core/filter2d``, the Pallas kernels, ``core/distributed``) use
+Consumers (``core/filter2d``, ``core/streaming``, ``core/distributed``) use
 the remap to source halo pixels from rows/cols already resident in VMEM /
-already streamed — zero extra HBM traffic, zero extra passes.
+already streamed — zero extra HBM traffic, zero extra passes. The Pallas
+kernels go one step further: ``kernels/filter2d/halo`` realises the same
+mux *inside* the kernel, on the VMEM scratch, fed by per-tile DMA from the
+un-tiled frame.
 
-Policies (paper Table IV):
-  ``neglect``      border neglecting — output shrinks by w-1 (no remap).
-  ``constant``     constant extension (value configurable, default 0).
-  ``wrap``         periodic wrap-around.
-  ``duplicate``    border duplication (clamp-to-edge).
-  ``mirror_dup``   mirroring WITH duplication  (… c b a | a b c …) — numpy
-                   'symmetric'.
-  ``mirror``       mirroring WITHOUT duplication (… c b | a | b c …) — numpy
-                   'reflect'; the paper's preferred policy.
+The policy vocabulary (paper Table IV), the ``BorderSpec`` dataclass and
+its aliases live in :mod:`repro.core.border_spec` (policy-neutral, no jax);
+this module holds the jnp-level remap machinery and re-exports the spec for
+backwards compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-POLICIES = ("neglect", "constant", "wrap", "duplicate", "mirror_dup", "mirror")
+from repro.core.border_spec import (ALIASES, BorderSpec, POLICIES,
+                                    SAME_SIZE_POLICIES, min_extent,
+                                    np_pad_mode, out_shape)
 
-# Policies that keep output size == input size (everything except neglect).
-SAME_SIZE_POLICIES = tuple(p for p in POLICIES if p != "neglect")
-
-
-@dataclasses.dataclass(frozen=True)
-class BorderSpec:
-    """A border policy + its parameters. Hashable, usable as a static arg."""
-
-    policy: str = "mirror"
-    constant: float = 0.0
-
-    def __post_init__(self):
-        if self.policy not in POLICIES:
-            raise ValueError(f"unknown border policy {self.policy!r}; "
-                             f"choose from {POLICIES}")
-
-    @property
-    def same_size(self) -> bool:
-        return self.policy != "neglect"
+__all__ = [
+    "ALIASES", "BorderSpec", "POLICIES", "SAME_SIZE_POLICIES",
+    "min_extent", "np_pad_mode", "out_shape",
+    "map_index", "valid_mask", "gather_rows", "extend",
+]
 
 
 def map_index(idx: jax.Array, n: int, policy: str) -> jax.Array:
@@ -62,6 +47,7 @@ def map_index(idx: jax.Array, n: int, policy: str) -> jax.Array:
     ``w <= n``, asserted by callers). For ``constant`` the remapped index is
     clamped (the *value* is fixed separately via :func:`valid_mask`).
     """
+    policy = ALIASES.get(policy, policy)
     if policy == "neglect":
         return idx  # caller never samples out-of-range under neglect
     if policy == "wrap":
@@ -116,24 +102,3 @@ def extend(x: jax.Array, radius: int, spec: BorderSpec,
     x = gather_rows(x, h_idx, spec, axis=ax_h)
     x = gather_rows(x, w_idx, spec, axis=ax_w)
     return x
-
-
-def np_pad_mode(policy: str) -> Optional[str]:
-    """The numpy.pad mode equivalent (oracle cross-checks in tests)."""
-    return {
-        "constant": "constant",
-        "wrap": "wrap",
-        "duplicate": "edge",
-        "mirror_dup": "symmetric",
-        "mirror": "reflect",
-        "neglect": None,
-    }[policy]
-
-
-def out_shape(h: int, w: int, window: int, spec: BorderSpec
-              ) -> Tuple[int, int]:
-    """Output frame shape for an (h, w) input (paper: Direct keeps H×W,
-    neglect/Transposed shrinks by w-1)."""
-    if spec.same_size:
-        return h, w
-    return h - (window - 1), w - (window - 1)

@@ -27,14 +27,20 @@ from repro.core.filter2d import _FORM_FNS, _as_nhwc, _un_nhwc
 
 def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
                      axis: str = "data", form: str = "direct",
-                     border_policy: str = "mirror") -> jax.Array:
+                     border_policy: str = "mirror",
+                     border: Optional[BorderSpec] = None) -> jax.Array:
     """Row-shard ``frame`` over ``mesh[axis]`` and filter with halo exchange.
 
     frame: [B,H,W,C] (H divisible by the axis size). Returns same shape.
+    Every same-size policy is supported: ``wrap`` in particular is *free*
+    here — the ppermute halo exchange already runs on a ring, so the first
+    shard's top halo arrives from the last shard (the opposite frame edge),
+    which is exactly wrap's semantics. Pass ``border`` (wins over
+    ``border_policy``) for non-zero constants.
     """
-    if border_policy in ("neglect", "wrap"):
-        raise ValueError(f"sharded path does not support {border_policy!r}")
-    spec = BorderSpec(border_policy)
+    spec = border if border is not None else BorderSpec(border_policy)
+    if spec.policy == "neglect":
+        raise ValueError("sharded path does not support 'neglect'")
     x, add_b, add_c = _as_nhwc(frame)
     B, H, W, C = x.shape
     w = coeffs.shape[-1]
@@ -57,15 +63,18 @@ def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
         top_from_above = jax.lax.ppermute(xs[:, Hs - r:], axis, fwd)
         bot_from_below = jax.lax.ppermute(xs[:, :r], axis, bwd)
         ext = jnp.concatenate([top_from_above, xs, bot_from_below], axis=1)
-        # true frame edges: remap locally (halo rows from the wrap-neighbour
-        # are garbage there and are overwritten by the remap)
-        first_src = jnp.concatenate([xs, bot_from_below], axis=1)
-        hi_first = gather_rows(first_src, jnp.arange(-r, Hs + r), spec, axis=1)
-        ext = jnp.where(idx == 0, hi_first, ext)
-        last_src = jnp.concatenate([top_from_above, xs], axis=1)
-        hi_last = gather_rows(last_src, jnp.arange(0, Hs + 2 * r), spec,
-                              axis=1)
-        ext = jnp.where(idx == n_shards - 1, hi_last, ext)
+        if spec.policy != "wrap":
+            # true frame edges: remap locally (halo rows from the
+            # wrap-neighbour are garbage there and are overwritten by the
+            # remap). Under wrap the ring delivery IS the right answer.
+            first_src = jnp.concatenate([xs, bot_from_below], axis=1)
+            hi_first = gather_rows(first_src, jnp.arange(-r, Hs + r), spec,
+                                   axis=1)
+            ext = jnp.where(idx == 0, hi_first, ext)
+            last_src = jnp.concatenate([top_from_above, xs], axis=1)
+            hi_last = gather_rows(last_src, jnp.arange(0, Hs + 2 * r), spec,
+                                  axis=1)
+            ext = jnp.where(idx == n_shards - 1, hi_last, ext)
         # column halo: plain index remap, local
         wi = jnp.arange(-r, W + r)
         ext = gather_rows(ext, wi, spec, axis=2)

@@ -270,7 +270,12 @@ def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
     The multi-filter analogue of the paper's coefficient file: on the MXU
     the N coefficient vectors become the matmul RHS [w², N], so the whole
     bank costs one pass over the frame (input read ONCE for all filters).
+    Integer frames follow the fixed-point contract of :func:`filter2d`:
+    multiply-accumulate in int32, int32 out.
     """
+    if frame.dtype in (jnp.int8, jnp.uint8, jnp.int16):
+        frame = frame.astype(jnp.int32)
+        bank = bank.astype(jnp.int32)
     frame_n, add_b, add_c = _as_nhwc(frame)
     B, H, W, C = frame_n.shape
     w = bank.shape[-1]
@@ -278,11 +283,11 @@ def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
     spec = border
     if border.policy == "neglect":
         xp = frame_n
-    elif border.policy == "constant":
-        return jnp.stack([filter2d(frame, bank[i], form=form, border=border)
-                          for i in range(bank.shape[0])], axis=-1)
     else:
-        xp = extend(frame_n, r, spec, axes=(1, 2))
+        # one extension serves the whole bank (constant included): the
+        # input is read ONCE for all N filters, matching the Pallas path
+        xp = _extend_policy(frame_n, r, border.policy,
+                            jnp.asarray(border.constant, frame_n.dtype))
     Ho, Wo = out_shape(H, W, w, spec)
     planes = jnp.stack(
         [_shifted(xp, i, j, Ho, Wo) for i in range(w) for j in range(w)],

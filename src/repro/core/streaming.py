@@ -10,18 +10,20 @@ what bounds on-chip memory exactly as the row buffer bounds BRAM.
 Border rows are sourced from the carry (top) / in-strip lookahead (bottom)
 with the border policy's index remap applied only at the first/last strip —
 the overlapped priming & flushing idea: no stall, no extra pass, the stream
-of strips never stops. ``wrap`` is unsupported here (it needs opposite-edge
-rows, which a row buffer by construction no longer holds — true to the
-paper's dataflow); use ``filter2d`` for wrap.
+of strips never stops. ``wrap`` needs the *opposite* frame edge, which a
+row buffer by construction no longer holds — it is served by a **prologue**:
+the r bottom rows are captured before the scan starts and spliced in at the
+first strip (and symmetrically the top rows at the last strip), the same
+scheme the Pallas halo engine implements with prologue DMAs.
 
 This file is the *jnp* streaming path; the Pallas kernel in
 ``kernels/filter2d`` implements the same schedule with an explicit VMEM
-scratch carry and grid ``dimension_semantics=('arbitrary',)``.
+scratch and in-kernel halo DMA (``kernels/filter2d/halo``).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,19 +44,23 @@ def strip_height_for_vmem(width: int, channels: int, w: int,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("form", "border_policy", "strip_h"))
+    jax.jit, static_argnames=("form", "border_policy", "strip_h", "border"))
 def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
                        form: str = "direct", border_policy: str = "mirror",
-                       strip_h: int = 64) -> jax.Array:
+                       strip_h: int = 64,
+                       border: Optional[BorderSpec] = None) -> jax.Array:
     """Filter a frame strip-by-strip with a carried (w−1)-row buffer.
 
-    Semantics identical to ``filter2d(...)`` for same-size policies (except
-    ``wrap``). Frame height must divide by ``strip_h`` and
-    ``strip_h >= w-1`` (the carry must fit inside one strip).
+    Semantics identical to ``filter2d(...)`` for every same-size policy
+    (``zero``/``constant(c)``, ``replicate``/``duplicate``, ``reflect``/
+    ``mirror``, ``mirror_dup``, ``wrap``). Pass a full ``BorderSpec`` via
+    ``border`` (wins over ``border_policy``) for non-zero constants. Frame
+    height must divide by ``strip_h`` and ``strip_h >= w-1`` (the carry
+    must fit inside one strip).
     """
-    if border_policy in ("neglect", "wrap"):
-        raise ValueError(f"streaming path does not support {border_policy!r}")
-    spec = BorderSpec(border_policy)
+    spec = border if border is not None else BorderSpec(border_policy)
+    if spec.policy == "neglect":
+        raise ValueError("streaming path does not support 'neglect'")
     x, add_b, add_c = _as_nhwc(frame)
     B, H, W, C = x.shape
     w = coeffs.shape[-1]
@@ -70,21 +76,29 @@ def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
     xc = gather_rows(x, wi, spec, axis=2)  # [B, H, W+2r, C]
 
     strips = xc.reshape(B, n_strips, strip_h, W + 2 * r, C).swapaxes(0, 1)
+    # wrap prologue: the opposite-edge rows the row buffer cannot hold
+    top_rows = xc[:, :r] if r else xc[:, :0]
+    bot_rows = xc[:, H - r:] if r else xc[:, :0]
 
     def step(carry, inputs):
         row_buf, i = carry                  # [B, r, W+2r, C] rows above
         strip, nxt = inputs                 # current strip, lookahead strip
         # Interior: ext rows = [carry | strip | next strip's first r rows]
         ext = jnp.concatenate([row_buf, strip, nxt[:, :r]], axis=1)
-        # First strip: top halo = border remap into [strip | lookahead]
-        first_src = jnp.concatenate([strip, nxt[:, :r]], axis=1)  # rows [0, S+r)
-        hi_first = gather_rows(first_src, jnp.arange(-r, strip_h + r), spec,
-                               axis=1)
+        if spec.policy == "wrap":
+            # first/last strip: splice the prologue's opposite-edge rows
+            hi_first = jnp.concatenate([bot_rows, strip, nxt[:, :r]], axis=1)
+            hi_last = jnp.concatenate([row_buf, strip, top_rows], axis=1)
+        else:
+            # First strip: top halo = border remap into [strip | lookahead]
+            first_src = jnp.concatenate([strip, nxt[:, :r]], axis=1)
+            hi_first = gather_rows(first_src, jnp.arange(-r, strip_h + r),
+                                   spec, axis=1)
+            # Last strip: bottom halo = border remap into [carry | strip]
+            last_src = jnp.concatenate([row_buf, strip], axis=1)
+            hi_last = gather_rows(last_src, jnp.arange(0, strip_h + 2 * r),
+                                  spec, axis=1)
         ext = jnp.where(i == 0, hi_first, ext)
-        # Last strip: bottom halo = border remap into [carry | strip]
-        last_src = jnp.concatenate([row_buf, strip], axis=1)  # rows [H-S-r, H)
-        hi_last = gather_rows(last_src, jnp.arange(0, strip_h + 2 * r), spec,
-                              axis=1)
         ext = jnp.where(i == n_strips - 1, hi_last, ext)
         y = _FORM_FNS[form](ext, coeffs, strip_h, W)
         new_buf = strip[:, strip_h - r:] if r else row_buf

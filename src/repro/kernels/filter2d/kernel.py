@@ -1,53 +1,60 @@
 """Pallas TPU kernels for streaming 2D spatial filtering (paper §II + §III).
 
-Two buffering regimes, mirroring the paper's:
+One kernel, two buffering regimes (selected by the halo plan's geometry,
+mirroring the paper's):
 
-``small``   — the *pixel cache* regime: each (border-extended) plane is
-              VMEM-resident; one grid step computes one plane × one filter.
-              Valid for frames up to the VMEM budget (the paper's "window
-              cache" generalised to a frame cache).
+``small``   — the *pixel cache* regime: the plan degenerates to a single
+              strip × a single tile, so the whole (halo-extended) plane
+              lives in the VMEM scratch; one grid step computes one plane ×
+              one filter. Valid for frames up to the VMEM budget.
 
 ``stream``  — the *row buffer* regime, generalised to **2D tiling**: the
-              grid is (planes, column tiles, row strips + 1, filters) and
+              grid is (planes, column tiles, row strips, filters) and
               streams row strips sequentially within each lane-aligned
-              column tile (``dimension_semantics=('arbitrary', …)``); a
-              VMEM scratch carries the previous strip across steps (the
-              paper's (w−1)-row buffer — we carry a full strip so output
-              blocks stay tile-aligned). Step i=0 of each tile only primes
-              the buffer (the paper's *priming* phase); one extra grid step
-              at the end drains the last strip (*flushing*). Output strip i
-              is written at grid step i+1 — overlapped priming & flushing,
-              no stall. The per-step VMEM working set is bounded by
-              strip_h × tile_w (see :func:`stream_vmem_working_set`),
-              independent of frame height AND width — arbitrary-width (8K)
-              frames stream under a fixed strip budget.
+              column tile. Each strip step DMAs its S+2r input rows (the
+              paper's w−1 row buffer, plus the strip body) straight from
+              the **un-tiled frame in HBM** into the VMEM scratch — there
+              is no pre-tiled, halo-duplicated HBM layout anywhere. The
+              per-step VMEM working set is bounded by strip_h × tile_w
+              (see :func:`stream_vmem_working_set`), independent of frame
+              height AND width — arbitrary-width (8K) frames stream under
+              a fixed strip budget.
+
+**Borders are resolved inside the kernel** by the halo engine
+(``kernels/filter2d/halo``): the DMA gathers only in-frame pixels and the
+policy (zero/constant, replicate, reflect, mirror-with-duplication, wrap)
+is realised as an in-VMEM index mux on the scratch edges — wrap's
+opposite-edge rows/cols/corners arrive by prologue DMAs. This is the
+paper's lean border mux, traced: no stall, no extra HBM pass, every policy
+native to the stream.
 
 Both regimes fold **batch/channel planes and the filter bank into the
-kernel grid** (no outer ``vmap``): input planes are [M, …], coefficients
-[N, w, w], outputs [M, N, …]. Column-tile halos are remapped tile-locally
-by ``ops.py`` with the lean index mux of ``core/borders.gather_rows`` (a
-gather, never a padded HBM round-trip). Coefficients are a runtime operand
-in VMEM (the paper's coefficient file): one compiled kernel serves any
-filter.
+kernel grid** (no outer ``vmap``): input planes are [M, H, W], coefficients
+[N, w, w], outputs [M, N, …]. Plane and column-tile grid dims are marked
+``parallel`` (megacore-partitionable: each (plane, tile) owns its scratch);
+the strip and filter dims stay ``arbitrary`` — strips so the stream order
+is preserved, filters so the scratch filled at the first filter step is
+reused by the rest of the bank (the coefficient file's read-once property:
+the filter dim is innermost and the fill is ``pl.when(f == 0)``-guarded).
 
 The w² reduction supports the paper's four layouts (direct / transposed /
 tree / compress) — see ``core/filter2d`` for the FPGA↔TPU mapping — plus a
 **separable fast path**: rank-1 filters run a fused w-tap column pass +
-w-tap row pass (2w MACs/pixel instead of w²), the RIPL/Campos
-decomposition expressed as one streaming kernel.
+w-tap row pass (2w MACs/pixel instead of w²).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
-from repro.kernels._compat import CompilerParams
 
-LANE = 128  # TPU lane width: last-dim alignment target
+from repro.kernels._compat import CompilerParams
+from repro.kernels.filter2d import halo
+from repro.kernels.filter2d.halo import HaloPlan
+
+LANE = halo.LANE  # TPU lane width: last-dim alignment target
 
 
 def _reduce_taps(ext, coeffs, Ho: int, Wo: int, w: int, form: str):
@@ -108,149 +115,80 @@ def _reduce_separable(ext, u, v, Ho: int, Wo: int, w: int):
 
 
 # ---------------------------------------------------------------------------
-# small kernel: plane-resident (pixel-cache regime), grid = (planes, filters)
+# The halo-engine kernel: grid = (planes, column tiles, row strips, filters)
 # ---------------------------------------------------------------------------
 
 
-def _small_kernel(x_ref, c_ref, o_ref, *, w: int, form: str):
-    ext = x_ref[0]
-    Ho, Wo = o_ref.shape[-2:]
-    o_ref[0, 0] = _reduce_taps(ext, c_ref[0], Ho, Wo, w, form)
+def _halo_kernel(x_ref, c_ref, o_ref, ext_ref, sem, *, plan: HaloPlan,
+                 form: str, w: int):
+    """Grid step (m, j, i, f): fill the scratch with strip i of tile j
+    (in-frame DMA + border mux) at the bank's first filter step, then
+    reduce the taps for filter f.
 
-
-def _small_sep_kernel(x_ref, uv_ref, o_ref, *, w: int):
-    ext = x_ref[0]
-    Ho, Wo = o_ref.shape[-2:]
-    o_ref[0, 0] = _reduce_separable(ext, uv_ref[0, 0], uv_ref[0, 1],
-                                    Ho, Wo, w)
-
-
-def filter2d_small(x_ext: jax.Array, coeffs: jax.Array,
-                   out_shape: Tuple[int, int], *, form: str = "direct",
-                   interpret: bool = True) -> jax.Array:
-    """x_ext: [M, Ho+2r, Wo+2r(+pad)] extended planes; coeffs: [N, w, w]
-    (or [N, 2, w] row/col factors when ``form == 'separable'``).
-    Returns [M, N, Ho, Wo_pad] — plane and filter dims are grid dims.
+    x_ref is the whole un-tiled [M, H, W] plane stack in ANY/HBM space —
+    the kernel's own DMA is the only reader, so the stream is read-once
+    from HBM (plus the 2r strip overlap). The scratch persists across the
+    innermost (filter) steps: the coefficient-file read-once property.
     """
-    w = coeffs.shape[-1]
-    M, He, Wp = x_ext.shape
-    N = coeffs.shape[0]
-    Ho, Wo = out_shape
-    if form == "separable":
-        body = functools.partial(_small_sep_kernel, w=w)
-        c_block = (1, 2, w)
-    else:
-        body = functools.partial(_small_kernel, w=w, form=form)
-        c_block = (1, w, w)
-    return pl.pallas_call(
-        body,
-        out_shape=jax.ShapeDtypeStruct((M, N, Ho, Wo), x_ext.dtype),
-        grid=(M, N),
-        in_specs=[
-            pl.BlockSpec((1, He, Wp), lambda m, f: (m, 0, 0)),
-            pl.BlockSpec(c_block, lambda m, f: (f, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, Ho, Wo), lambda m, f: (m, f, 0, 0)),
-        interpret=interpret,
-        compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")),
-        name=f"filter2d_small_{form}",
-    )(x_ext, coeffs)
+    m = pl.program_id(0)
+    j = pl.program_id(1)
+    i = pl.program_id(2)
 
+    @pl.when(pl.program_id(3) == 0)
+    def _fill_scratch():
+        halo.fill_ext(x_ref.at[m], ext_ref, sem, i, j, plan)
 
-# ---------------------------------------------------------------------------
-# stream kernel: 2D-tiled row-strip streaming with a carried line buffer
-# ---------------------------------------------------------------------------
-
-
-def _stream_kernel(x_ref, c_ref, o_ref, buf_ref, *, w: int, S: int,
-                   form: str):
-    """Grid step (m, j, i, f) reads strip i of column tile j (clamped),
-    writes output strip i−1 for filter f.
-
-    buf_ref is the line buffer: the previous strip (S rows of the tile),
-    persisted in VMEM across grid steps. Priming at i=0 (per tile),
-    flushing at i=n. The filter dim is INNERMOST and the input block
-    index is independent of f, so Pallas's revisit elision fetches each
-    strip once and reuses it for all N filters (read-once bank); the
-    line buffer advances only on the LAST f step, since earlier f steps
-    of strip i still need strip i−1 in it.
-    """
-    r = (w - 1) // 2
-    cur = x_ref[0, 0]                       # [S, Twh] strip i (or last)
-    prev = buf_ref[...]
-
-    # ext rows [(i-1)·S, (i-1)·S + S + 2r) of the tile's extended plane
-    ext = jnp.concatenate([prev, cur], axis=0)[: S + 2 * r]
-    Tw = o_ref.shape[-1]
+    ext = ext_ref[...]
+    S, Tw = o_ref.shape[-2:]
     if form == "separable":
         y = _reduce_separable(ext, c_ref[0, 0], c_ref[0, 1], S, Tw, w)
     else:
         y = _reduce_taps(ext, c_ref[0], S, Tw, w, form)
-
-    # i = 0 is the priming step: block 0 is revisited (and overwritten) at
-    # i = 1, so an unconditional store is safe and branch-free — the paper's
-    # "no stall / regular dataflow" property.
-    o_ref[0, 0, 0] = y
-
-    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
-    def _advance_line_buffer():
-        buf_ref[...] = cur
+    o_ref[0, 0] = y
 
 
-def filter2d_stream(x_tiles: jax.Array, coeffs: jax.Array, *,
-                    strip_h: int = 128, tile_w: int = 512,
-                    form: str = "direct", interpret: bool = True
-                    ) -> jax.Array:
-    """2D-tiled streaming filter.
+def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
+                  form: str = "direct", interpret: bool = True) -> jax.Array:
+    """Streaming 2D filter with in-kernel border management.
 
-    x_tiles: [M, n_ct, n_in·S, Tw + 2r (+pad)] — per-plane column tiles of
-    the row-extended frame, halos already remapped tile-locally (ops.py).
-    coeffs: [N, w, w] filter bank (or [N, 2, w] factors for
-    ``form='separable'``). Returns [M, N, n_ct, Ho_pad, tile_w] with
-    Ho_pad = (n_in·S − 2r rounded to strips).
+    planes: [M, H, W] raw (un-tiled, un-extended) frame planes — the only
+    HBM-resident input. coeffs: [N, w, w] filter bank (or [N, 2, w] row/col
+    factors for ``form='separable'``). Returns [M, N, Ho_pad, Wo_pad] with
+    Ho_pad = n_strips·S, Wo_pad = n_tiles·Tw (callers crop).
 
-    Grid is (M, n_ct, n+1, N) — the +1 is the flush step; the filter dim
-    is innermost so each fetched strip serves all N filters before the
-    stream advances (the coefficient file read-once property). VMEM
-    working set per step: 2 strip tiles + an output tile + coeffs — the
-    row-buffer bound, independent of both frame height and width.
+    The grid is (M, n_tiles, n_strips, N): filters innermost so each
+    scratch fill serves the whole bank; planes and column tiles are
+    ``parallel`` (provably independent — megacore-partitionable), strips
+    and filters ``arbitrary`` (stream order; scratch reuse is core-local).
+    VMEM per step: the (S+2r)×(Tw+2r lane-padded) scratch + an S×Tw output
+    block + the coefficient file — the row-buffer bound, independent of
+    both frame height and width.
     """
     w = coeffs.shape[-1]
-    r = (w - 1) // 2
-    M, n_ct, Hs, Twh = x_tiles.shape
+    M = planes.shape[0]
     N = coeffs.shape[0]
-    S = strip_h
-    Tw = tile_w
-    assert Hs % S == 0 and S >= 2 * r, (Hs, S, r)
-    n_in = Hs // S
-    # output strips: strip i covers ext rows [i·S, i·S + S + 2r); the last
-    # 2r halo rows are folded into the flush step's clamped re-read.
-    n = (Hs - 2 * r) // S
-    Ho_pad = n * S
-
+    S, Tw = plan.rows.block, plan.cols.block
+    n_i, n_j = plan.rows.n, plan.cols.n
     c_block = (1, 2, w) if form == "separable" else (1, w, w)
-    grid = (M, n_ct, n + 1, N)
     return pl.pallas_call(
-        functools.partial(_stream_kernel, w=w, S=S, form=form),
-        out_shape=jax.ShapeDtypeStruct((M, N, n_ct, Ho_pad, Tw),
-                                       x_tiles.dtype),
-        grid=grid,
+        functools.partial(_halo_kernel, plan=plan, form=form, w=w),
+        out_shape=jax.ShapeDtypeStruct((M, N, n_i * S, n_j * Tw),
+                                       planes.dtype),
+        grid=(M, n_j, n_i, N),
         in_specs=[
-            pl.BlockSpec((1, 1, S, Twh),
-                         lambda m, j, i, f: (m, j, jnp.minimum(i, n_in - 1),
-                                             0)),
-            pl.BlockSpec(c_block, lambda m, j, i, f: (f, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(c_block, lambda m, jj, ii, f: (f, 0, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (1, 1, 1, S, Tw),
-            lambda m, j, i, f: (m, f, j, jnp.maximum(i - 1, 0), 0)),
-        scratch_shapes=[pltpu.VMEM((S, Twh), x_tiles.dtype)],
+            (1, 1, S, Tw), lambda m, jj, ii, f: (m, f, ii, jj)),
+        scratch_shapes=[pltpu.VMEM((plan.eh, plan.ew), planes.dtype),
+                        pltpu.SemaphoreType.DMA],
         interpret=interpret,
         compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",) * 4),
-        name=f"filter2d_stream_{form}",
-    )(x_tiles, coeffs)
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary")),
+        name=f"filter2d_halo_{form}_{plan.policy}",
+    )(planes, coeffs)
 
 
 def stream_vmem_working_set(strip_h: int, tile_w: int, w: int,
@@ -259,15 +197,17 @@ def stream_vmem_working_set(strip_h: int, tile_w: int, w: int,
                             num_filters: int = 1) -> int:
     """Bytes resident in VMEM per stream grid step (the row-buffer bound).
 
-    Input strip tile + carried line buffer + output tile + coefficient
-    file. A function of (strip_h, tile_w, w) ONLY — never of the frame
-    dimensions; this is the invariant the 2D tiling exists to provide.
+    The halo-extended scratch + the output tile + the coefficient file. A
+    function of (strip_h, tile_w, w) ONLY — never of the frame dimensions;
+    this is the invariant the 2D tiling exists to provide. (The in-kernel
+    halo engine halved the old bound: the scratch doubles as strip buffer
+    AND line buffer, and the input tile no longer needs a second VMEM
+    block — it is DMA'd from HBM directly into the scratch.)
     """
     r = (w - 1) // 2
-    twh = tile_w + 2 * r
-    twh += (-twh) % LANE                 # lane padding, as ops.py lays out
-    in_tile = strip_h * twh * dtype_bytes
-    line_buf = strip_h * twh * dtype_bytes
+    ew = tile_w + 2 * r
+    ew += (-ew) % LANE                   # lane padding, as the plan lays out
+    ext_scratch = (strip_h + 2 * r) * ew * dtype_bytes
     out_tile = strip_h * tile_w * dtype_bytes
     coeff = num_filters * (2 * w if separable else w * w) * dtype_bytes
-    return in_tile + line_buf + out_tile + coeff
+    return ext_scratch + out_tile + coeff

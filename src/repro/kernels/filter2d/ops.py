@@ -1,22 +1,22 @@
 """jit'd public wrappers for the filter2d Pallas kernels.
 
-The wrapper owns everything the FPGA control unit owned:
-  * border extension as a lean index remap (``core/borders.gather_rows``) —
-    one gather per axis, no w²-sized intermediates. The tiled stream
-    layout IS materialized ahead of the kernel (halo columns duplicated,
-    ~2r/tile_w ≈ 2% extra at the defaults), one HBM pass the kernel then
-    streams once; folding that gather into the kernel's own DMA is an
-    open item (ROADMAP);
-  * lane alignment: column tiles padded to a multiple of 128 (MXU/VPU lane
-    width);
-  * strip/tile sizing: Ho padded to the strip grid, W split into
-    lane-aligned column tiles with tile-local halo remap, so the per-step
-    VMEM working set is bounded by strip_h × tile_w regardless of frame
-    dimensions (8K-wide frames stream under the same budget as VGA);
+The wrapper owns what the FPGA control unit owned:
+  * strip/tile sizing: Ho split into row strips, W into lane-aligned (128)
+    column tiles, so the per-step VMEM working set is bounded by
+    strip_h × tile_w regardless of frame dimensions (8K-wide frames stream
+    under the same budget as VGA);
   * plane folding: batch/channel (and the filter bank) become kernel grid
     dimensions — no outer ``vmap`` of a 2D kernel;
   * form/regime dispatch (frame-resident ``small`` vs streaming ``stream``)
     and the separable fast path (``separable='auto'|True|False``).
+
+Border management is **not** resolved here any more: the halo engine
+(``kernels/filter2d/halo``) realises every policy — ``zero``/
+``constant(c)``, ``replicate``/``duplicate``, ``reflect``/``mirror``,
+``mirror_dup``, ``wrap`` and ``neglect`` — inside the kernel, by per-tile
+DMA from the un-tiled frame plus an in-VMEM index mux. The old row-extended,
+halo-duplicated HBM staging layout (one extra full-frame HBM pass ahead of
+the kernel) is gone: the kernel's input operand IS the raw frame, read once.
 
 On non-TPU backends kernels run in ``interpret=True`` mode (bit-accurate
 Python execution of the kernel body) — the TPU lowering is exercised by the
@@ -30,11 +30,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.borders import BorderSpec, gather_rows
+from repro.core.border_spec import BorderSpec
 from repro.core.filter2d import resolve_separable
+from repro.kernels.filter2d import halo
 from repro.kernels.filter2d import kernel as K
 
-LANE = 128
+LANE = halo.LANE
 
 
 def _default_interpret() -> bool:
@@ -74,109 +75,40 @@ def _unfold(y: jax.Array, tag, keep_bank: bool) -> jax.Array:
     return y if keep_bank else y[..., 0]
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    n = x.shape[axis]
-    pad = (-n) % mult
-    if pad == 0:
-        return x
-    cfg = [(0, 0)] * x.ndim
-    cfg[axis] = (0, pad)
-    return jnp.pad(x, cfg)
-
-
-def _extend_rows(planes: jax.Array, idx_lo: int, total: int, r: int,
-                 H: int, spec: BorderSpec) -> jax.Array:
-    """Gather ``total`` rows starting at extended-row ``idx_lo``; indices
-    beyond the legal remap range (bottom strip padding) clamp to the last
-    legal extended row — they only feed discarded output rows."""
-    raw = jnp.arange(idx_lo, idx_lo + total)
-    if spec.policy == "neglect":
-        return jnp.take(planes, jnp.clip(raw, 0, H - 1), axis=1)
-    return gather_rows(planes, jnp.clip(raw, -r, H - 1 + r), spec, axis=1)
-
-
-def _gather_col_tiles(xr: jax.Array, n_ct: int, tile_w: int, twh_p: int,
-                      r: int, W: int, spec: BorderSpec) -> jax.Array:
-    """Tile-local column halo remap: tile j's twh_p input columns (Tw + 2r
-    + lane pad) gathered through the border mux in ONE gather.
-
-    xr: [M, rows, W] -> [M, n_ct, rows, twh_p].
-    """
-    base = jnp.arange(n_ct)[:, None] * tile_w
-    off = jnp.arange(twh_p)[None, :]
-    if spec.policy == "neglect":
-        ci = jnp.clip(base + off, 0, W - 1)
-        xt = jnp.take(xr, ci.reshape(-1), axis=2)
-    else:
-        ci = jnp.clip(base + off - r, -r, W - 1 + r)
-        xt = gather_rows(xr, ci.reshape(-1), spec, axis=2)
-    M, rows = xr.shape[0], xr.shape[1]
-    return xt.reshape(M, rows, n_ct, twh_p).transpose(0, 2, 1, 3)
-
-
 @functools.partial(
     jax.jit,
-    static_argnames=("form", "border_policy", "regime", "strip_h", "tile_w",
+    static_argnames=("form", "border", "regime", "strip_h", "tile_w",
                      "interpret"))
 def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array, *,
-                            form: str, border_policy: str, regime: str,
+                            form: str, border: BorderSpec, regime: str,
                             strip_h: int, tile_w: int,
                             interpret: bool) -> jax.Array:
     """planes: [M, H, W]; coeffs: [N, w, w] (or [N, 2, w] factors for
     ``form='separable'``). Returns [M, N, Ho, Wo]."""
-    spec = BorderSpec(border_policy)
     M, H, W = planes.shape
     w = coeffs.shape[-1]
     r = (w - 1) // 2
-    if spec.policy == "neglect":
-        Ho, Wo = H - 2 * r, W - 2 * r
-    else:
+    if border.same_size:
         Ho, Wo = H, W
+    else:
+        Ho, Wo = H - 2 * r, W - 2 * r
 
     if regime == "small":
-        # whole-plane extension + lane alignment: padded cols only feed
-        # discarded output cols.
-        x_ext = _extend_rows(planes, -r if spec.same_size else 0,
-                             Ho + 2 * r, r, H, spec)
-        if spec.same_size:
-            wi = jnp.arange(-r, W + r)
-            x_ext = gather_rows(x_ext, wi, spec, axis=2)
-        x_ext = _pad_to(x_ext, 2, LANE)
-        y = K.filter2d_small(x_ext, coeffs,
-                             (Ho, x_ext.shape[2] - 2 * r), form=form,
-                             interpret=interpret)
-        return y[..., :Wo]
-
-    if regime != "stream":
+        # pixel-cache regime: one strip × one tile = the whole plane
+        # (halo-extended) resident in the VMEM scratch.
+        S, Tw = Ho, Wo + ((-Wo) % LANE)
+    elif regime == "stream":
+        # row-buffer regime: strips clamped so multi-strip plans keep
+        # S >= 2r (only the first/last strips ever touch a frame edge);
+        # column tiles lane-aligned.
+        S = max(min(strip_h, Ho), min(2 * r, Ho), 1)
+        Tw = min(tile_w + ((-tile_w) % LANE), Wo + ((-Wo) % LANE))
+    else:
         raise ValueError(regime)
 
-    # --- stream: row strips × lane-aligned column tiles -------------------
-    S = max(min(strip_h, Ho), 2 * r, 1)
-    Ho_pad = Ho + ((-Ho) % S)
-    n_in = (Ho_pad + 2 * r + S - 1) // S
-    # rows of the extended plane, padded to whole strips (padding rows only
-    # feed output rows >= Ho, which are cropped).
-    xr = _extend_rows(planes, 0 if spec.policy == "neglect" else -r,
-                      n_in * S, r, H, spec)
-    Tw = min(tile_w, Wo + ((-Wo) % LANE))
-    Tw += (-Tw) % LANE                    # lane-aligned column tiles
-    n_ct = -(-Wo // Tw)
-    twh = Tw + 2 * r
-    twh_p = twh + ((-twh) % LANE) if r else twh
-    xt = _gather_col_tiles(xr, n_ct, Tw, twh_p, r, W, spec)
-    y = K.filter2d_stream(xt, coeffs, strip_h=S, tile_w=Tw, form=form,
-                          interpret=interpret)
-    # [M, N, n_ct, Ho_pad, Tw] -> [M, N, Ho_pad, n_ct·Tw] -> crop
-    N = coeffs.shape[0]
-    y = y.transpose(0, 1, 3, 2, 4).reshape(M, N, Ho_pad, n_ct * Tw)
+    plan = halo.make_plan(H, W, w, border, S, Tw)
+    y = K.filter2d_halo(planes, coeffs, plan, form=form, interpret=interpret)
     return y[:, :, :Ho, :Wo]
-
-
-def _check_border(border: BorderSpec) -> None:
-    if border.policy == "wrap":
-        raise ValueError("wrap needs opposite-edge rows; use core.filter2d")
-    if border.policy == "constant" and border.constant != 0.0:
-        raise NotImplementedError("non-zero constant: use core.filter2d")
 
 
 def _coeff_operand(frame: jax.Array, coeffs: jax.Array, form: str,
@@ -200,20 +132,21 @@ def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
     """Pallas-kernel 2D filter. frame: [H,W] | [H,W,C] | [B,H,W,C].
 
     ``regime='small'`` keeps each plane VMEM-resident (pixel-cache regime);
-    ``'stream'`` streams row strips × column tiles with a carried line
-    buffer (row-buffer regime) — the VMEM working set is bounded by
-    ``strip_h × tile_w`` for any frame size. Batch/channel planes ride the
-    kernel grid. ``separable='auto'`` routes rank-1 filters through the
-    fused 2w-MAC row/column-pass kernel.
+    ``'stream'`` streams row strips × column tiles, each DMA'd on demand
+    from the un-tiled frame (row-buffer regime) — the VMEM working set is
+    bounded by ``strip_h × tile_w`` for any frame size. Batch/channel
+    planes ride the kernel grid. All border policies (``zero``/
+    ``constant(c)``, ``replicate``, ``reflect``, ``mirror_dup``, ``wrap``,
+    ``neglect``) are resolved natively inside the kernel by the halo
+    engine — no fallback path. ``separable='auto'`` routes rank-1 filters
+    through the fused 2w-MAC row/column-pass kernel.
     """
-    _check_border(border)
     interpret = _default_interpret() if interpret is None else interpret
     planes, tag = _fold_planes(frame)
     co, form = _coeff_operand(frame, coeffs, form, separable)
-    y = _filter2d_pallas_planes(planes, co, form=form,
-                                border_policy=border.policy, regime=regime,
-                                strip_h=strip_h, tile_w=tile_w,
-                                interpret=interpret)
+    y = _filter2d_pallas_planes(planes, co, form=form, border=border,
+                                regime=regime, strip_h=strip_h,
+                                tile_w=tile_w, interpret=interpret)
     return _unfold(y, tag, keep_bank=False)
 
 
@@ -224,15 +157,15 @@ def filter_bank_pallas(frame: jax.Array, bank: jax.Array, *,
                        tile_w: int = 512,
                        interpret: Optional[bool] = None) -> jax.Array:
     """Apply a bank of N filters in one kernel launch: bank [N, w, w] ->
-    output [..., N]. The filter dim is a kernel grid dimension — the input
-    tile is read once per (plane, tile, strip) and reused for all N
-    coefficient sets (the paper's coefficient file, folded into the grid).
+    output [..., N]. The filter dim is a kernel grid dimension — the halo
+    scratch is filled once per (plane, tile, strip) and reused for all N
+    coefficient sets (the paper's coefficient file, folded into the grid),
+    under every border policy.
     """
-    _check_border(border)
     interpret = _default_interpret() if interpret is None else interpret
     planes, tag = _fold_planes(frame)
     y = _filter2d_pallas_planes(planes, jnp.asarray(bank), form=form,
-                                border_policy=border.policy, regime=regime,
+                                border=border, regime=regime,
                                 strip_h=strip_h, tile_w=tile_w,
                                 interpret=interpret)
     return _unfold(y, tag, keep_bank=True)

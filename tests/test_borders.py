@@ -3,6 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro.core.border_spec import ALIASES, min_extent
 from repro.core.borders import (BorderSpec, POLICIES, SAME_SIZE_POLICIES,
                                 gather_rows, map_index, np_pad_mode,
                                 out_shape, extend, valid_mask)
@@ -61,3 +62,37 @@ def test_valid_mask():
     m = np.asarray(valid_mask(jnp.arange(-2, 5), 3))
     np.testing.assert_array_equal(m, [False, False, True, True, True,
                                       False, False])
+
+
+# -- BorderSpec normalisation (the policy-neutral spec) ----------------------
+
+
+@pytest.mark.parametrize("alias,canonical", sorted(ALIASES.items()))
+def test_aliases_normalise(alias, canonical):
+    assert BorderSpec(alias).policy == canonical
+    assert np_pad_mode(alias) == np_pad_mode(canonical)
+
+
+def test_zero_alias_forces_zero_constant():
+    spec = BorderSpec("zero", 7.0)        # 'zero' means constant(0), always
+    assert spec.policy == "constant" and spec.constant == 0.0
+    assert BorderSpec("constant", 7.0).constant == 7.0
+
+
+def test_spec_is_hashable_static_arg():
+    assert BorderSpec("zero") == BorderSpec("constant", 0.0)
+    assert hash(BorderSpec("reflect")) == hash(BorderSpec("mirror"))
+    assert BorderSpec("mirror") != BorderSpec("mirror_dup")
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError):
+        BorderSpec("bogus")
+
+
+def test_min_extent():
+    assert min_extent(BorderSpec("mirror"), 3) == 4
+    assert min_extent(BorderSpec("wrap"), 3) == 3
+    assert min_extent(BorderSpec("mirror_dup"), 3) == 3
+    assert min_extent(BorderSpec("duplicate"), 3) == 1
+    assert min_extent(BorderSpec("constant"), 0) == 1

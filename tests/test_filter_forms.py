@@ -82,15 +82,29 @@ def test_filter_bank(rng):
 @pytest.mark.parametrize("sh", [8, 16, 32])
 @pytest.mark.parametrize("w", [3, 5, 7])
 @pytest.mark.parametrize("policy", ["mirror", "mirror_dup", "duplicate",
-                                    "constant"])
+                                    "constant", "wrap"])
 def test_streaming_equals_resident(sh, w, policy):
-    """Property: the row-buffer streaming schedule is output-invariant."""
+    """Property: the row-buffer streaming schedule is output-invariant
+    (wrap included — served by the prologue's opposite-edge rows)."""
     rng = np.random.default_rng(42)
     x = rng.standard_normal((64, 24)).astype(np.float32)
     k = jnp.asarray(filters.gaussian(w))
     ref = filter2d(jnp.asarray(x), k, border=BorderSpec(policy))
     got = filter2d_streaming(jnp.asarray(x), k, border_policy=policy,
                              strip_h=sh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=3e-5,
+                               atol=3e-5)
+
+
+def test_streaming_nonzero_constant():
+    """BorderSpec with a non-zero constant flows through the streaming
+    executor's column mux and first/last-strip remaps."""
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((64, 24)).astype(np.float32)
+    k = jnp.asarray(filters.gaussian(5))
+    spec = BorderSpec("constant", 4.5)
+    ref = filter2d(jnp.asarray(x), k, border=spec)
+    got = filter2d_streaming(jnp.asarray(x), k, border=spec, strip_h=16)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=3e-5,
                                atol=3e-5)
 
@@ -110,6 +124,21 @@ def test_filter_bank_equals_per_filter_loop(policy, rng):
         want = filter2d(x, bank[i], border=BorderSpec(policy))
         np.testing.assert_allclose(np.asarray(got[..., i]),
                                    np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("policy", ["mirror", "constant"])
+def test_filter_bank_fixed_point_accumulates_in_int32(policy, rng):
+    """Integer frames keep the exact int32 path through the bank: no
+    frame-dtype overflow, bank == per-filter filter2d loop."""
+    x = jnp.asarray(rng.integers(0, 50, (12, 14)).astype(np.int8))
+    bank = jnp.stack([jnp.ones((3, 3), jnp.int32),
+                      jnp.asarray(filters.sobel_x()).astype(jnp.int32)])
+    got = filter_bank(x, bank, border=BorderSpec(policy))
+    assert got.dtype == jnp.int32
+    for i in range(bank.shape[0]):
+        want = filter2d(x, bank[i], border=BorderSpec(policy))
+        np.testing.assert_array_equal(np.asarray(got[..., i]),
+                                      np.asarray(want))
 
 
 def test_unit_accounting():

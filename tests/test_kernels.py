@@ -33,7 +33,7 @@ def test_filter2d_shapes(H, W, w, regime, rng):
 
 @pytest.mark.parametrize("form", ["direct", "transposed", "tree", "compress"])
 @pytest.mark.parametrize("policy", ["mirror", "duplicate", "constant",
-                                    "neglect"])
+                                    "neglect", "wrap"])
 def test_filter2d_forms_policies(form, policy, rng):
     x = jnp.asarray(rng.standard_normal((48, 40)).astype(np.float32))
     k = jnp.asarray(filters.log_filter(5))

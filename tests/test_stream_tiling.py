@@ -32,7 +32,7 @@ def test_stream_small_core_parity(strip_h, H, W, rng):
 
 
 @pytest.mark.parametrize("policy", ["mirror", "mirror_dup", "duplicate",
-                                    "constant", "neglect"])
+                                    "constant", "neglect", "wrap"])
 @pytest.mark.parametrize("form", ["direct", "transposed", "tree",
                                   "compress"])
 def test_tiled_halo_every_policy_form(policy, form, rng):
@@ -97,7 +97,7 @@ def test_batched_channels_fold_into_grid(rng):
 
 
 @pytest.mark.parametrize("policy", ["mirror", "mirror_dup", "duplicate",
-                                    "constant"])
+                                    "constant", "wrap"])
 def test_filter_bank_pallas_equals_per_filter_loop(policy, rng):
     """The grid-folded bank == N separate filter2d_pallas calls == core
     filter_bank, for every same-size policy the Pallas path supports."""
