@@ -1,0 +1,128 @@
+"""CI bench-regression gate: diff two ``BENCH_*.json`` trajectory records.
+
+  PYTHONPATH=src python -m benchmarks.compare \
+      --baseline prev/BENCH_smoke.json --current BENCH_smoke.json
+
+The bench-smoke CI job downloads the previous successful main run's
+``bench-trajectory`` artifact and fails the build when the current record
+regresses against it:
+
+  * ``pixels_per_s`` drops by more than ``--max-rate-drop`` (default 15%,
+    row by row — interpret-mode wall time is noisy on shared runners, so
+    the threshold is deliberately loose; structural metrics carry the
+    precision);
+  * any ``hbm_bytes_per_pixel`` / ``hbm_read_bytes_per_pixel`` increase
+    per form × border row. These are *analytic* (derived from the static
+    halo plan, not timed), so ANY increase is a real datapath regression
+    — e.g. the int8 stream silently widening back to 4 bytes/pixel;
+  * a row present in the baseline vanished, or errored in the current run
+    (dropped coverage must not read as green).
+
+New rows (a fresh dtype lane, a new form) pass through and seed the next
+baseline. A missing baseline file is not an error: the first run of the
+gate seeds the trajectory and exits 0.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+# Analytic per-row metrics where any increase fails the gate outright.
+BYTES_KEYS = ("hbm_bytes_per_pixel", "hbm_read_bytes_per_pixel")
+RATE_KEY = "pixels_per_s"
+
+
+def index_rows(payload: dict) -> Dict[str, dict]:
+    """Map row name -> row record, skipping rows that errored."""
+    return {r["name"]: r for r in payload.get("rows", [])
+            if "error" not in r}
+
+
+def error_rows(payload: dict) -> Dict[str, str]:
+    return {r["name"]: r["error"] for r in payload.get("rows", [])
+            if "error" in r}
+
+
+def compare(baseline: dict, current: dict, *,
+            max_rate_drop: float = 0.15,
+            bytes_tol: float = 1e-9) -> Tuple[List[str], List[str]]:
+    """Diff two trajectory payloads; returns (failures, notes).
+
+    Pure function of the two records — the unit-testable core of the
+    gate. ``max_rate_drop`` is the fractional pixels/s drop tolerated
+    per row; byte metrics tolerate only float noise (``bytes_tol``).
+    """
+    base_rows = index_rows(baseline)
+    cur_rows = index_rows(current)
+    cur_errors = error_rows(current)
+    failures: List[str] = []
+    notes: List[str] = []
+
+    for name, b in sorted(base_rows.items()):
+        if name in cur_errors:
+            failures.append(f"{name}: errored in current run "
+                            f"({cur_errors[name]})")
+            continue
+        c = cur_rows.get(name)
+        if c is None:
+            failures.append(f"{name}: row vanished from the current record")
+            continue
+        if RATE_KEY in b and RATE_KEY in c:
+            floor = b[RATE_KEY] * (1.0 - max_rate_drop)
+            if c[RATE_KEY] < floor:
+                failures.append(
+                    f"{name}: {RATE_KEY} regressed "
+                    f"{b[RATE_KEY]:.3e} -> {c[RATE_KEY]:.3e} "
+                    f"({100 * (1 - c[RATE_KEY] / b[RATE_KEY]):.1f}% drop "
+                    f"> {100 * max_rate_drop:.0f}% allowed)")
+        for key in BYTES_KEYS:
+            if key in b and key in c and c[key] > b[key] + bytes_tol:
+                failures.append(f"{name}: {key} increased "
+                                f"{b[key]:.4f} -> {c[key]:.4f}")
+
+    new = sorted(set(cur_rows) - set(base_rows))
+    if new:
+        notes.append(f"{len(new)} new row(s) seed the trajectory: "
+                     + ", ".join(new[:8]) + ("..." if len(new) > 8 else ""))
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="previous run's BENCH_*.json (may not exist yet)")
+    ap.add_argument("--current", required=True,
+                    help="this run's BENCH_*.json")
+    ap.add_argument("--max-rate-drop", type=float, default=0.15,
+                    help="fractional pixels/s drop tolerated per row")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"[compare] no baseline at {args.baseline}: seeding the "
+              "trajectory with this run; gate passes vacuously")
+        return 0
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.current) as fh:
+        current = json.load(fh)
+
+    failures, notes = compare(baseline, current,
+                              max_rate_drop=args.max_rate_drop)
+    for n in notes:
+        print(f"[compare] note: {n}")
+    if failures:
+        for f in failures:
+            print(f"[compare] FAIL {f}", file=sys.stderr)
+        print(f"[compare] {len(failures)} regression(s) vs "
+              f"{args.baseline}", file=sys.stderr)
+        return 1
+    print(f"[compare] OK: {len(index_rows(current))} rows within budget "
+          f"vs {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

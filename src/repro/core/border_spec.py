@@ -20,6 +20,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+import numpy as np
+
 POLICIES = ("neglect", "constant", "wrap", "duplicate", "mirror_dup", "mirror")
 
 # Policies that keep output size == input size (everything except neglect).
@@ -81,6 +83,33 @@ def out_shape(h: int, w: int, window: int, spec: BorderSpec
     if spec.same_size:
         return h, w
     return h - (window - 1), w - (window - 1)
+
+
+def quantize_constant(value: float, dtype) -> float:
+    """Quantize a ``constant(c)`` border value against the frame's *storage*
+    dtype — the one shared rule for every datapath.
+
+    On the FPGA (and in the Pallas kernels) the border constant is injected
+    into the B-bit pixel stream *before* the wide MAC, so it must be
+    representable in the storage dtype: integer frames round ``c`` to the
+    nearest integer and saturate it into the dtype's range (int8: [-128,
+    127]), exactly as the hardware register would hold it. Float frames
+    pass ``c`` through unchanged. ``core.filter2d`` widens int frames to
+    int32 *before* extending the border, so without this rule an
+    out-of-range ``c`` (say 300 on an int8 frame) would silently survive
+    in the widened frame while the in-kernel path stores 127 — the two
+    paths would disagree at the edges. Both call this helper first.
+
+    Pure Python/numpy (no jax): kernel-side static planning
+    (``kernels/filter2d/halo.make_plan``) bakes the result into the
+    hashable plan.
+    """
+    dt = np.dtype(dtype)
+    if dt.kind in ("i", "u"):
+        info = np.iinfo(dt)
+        q = int(np.rint(value))
+        return int(min(max(q, info.min), info.max))
+    return float(value)
 
 
 def min_extent(spec: BorderSpec, radius: int) -> int:

@@ -13,6 +13,7 @@ must not disturb the (sharded) stream.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -21,8 +22,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.border_spec import quantize_constant
 from repro.core.borders import BorderSpec, gather_rows
-from repro.core.filter2d import _FORM_FNS, _as_nhwc, _un_nhwc
+from repro.core.filter2d import _FORM_FNS, _as_nhwc, _un_nhwc, is_fixed_point
 
 
 def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
@@ -41,6 +43,14 @@ def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
     spec = border if border is not None else BorderSpec(border_policy)
     if spec.policy == "neglect":
         raise ValueError("sharded path does not support 'neglect'")
+    # fixed-point: quantize constant(c) against the storage dtype (shared
+    # rule), widen to the int32 accumulator, then shard — the ppermute
+    # ring exchanges int32 halo rows and every shard accumulates exactly.
+    if is_fixed_point(frame.dtype):
+        spec = dataclasses.replace(
+            spec, constant=quantize_constant(spec.constant, frame.dtype))
+        frame = frame.astype(jnp.int32)
+        coeffs = coeffs.astype(jnp.int32)
     x, add_b, add_c = _as_nhwc(frame)
     B, H, W, C = x.shape
     w = coeffs.shape[-1]

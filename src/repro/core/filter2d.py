@@ -35,9 +35,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.borders import BorderSpec, extend, out_shape
+from repro.core.border_spec import quantize_constant
 from repro.core.filters import decompose_separable
 
 FORMS = ("direct", "transposed", "tree", "compress")
+
+# Narrow storage dtypes that run the fixed-point contract: stream/store at
+# the narrow width, multiply-accumulate in int32, return int32 (the paper's
+# B=8 pixels onto 48-bit DSP48 accumulation). The caller requantises.
+FIXED_POINT_DTYPES = (jnp.int8, jnp.uint8, jnp.int16)
+
+
+def is_fixed_point(dtype) -> bool:
+    """True for frame dtypes that take the int32-accumulate datapath."""
+    return jnp.dtype(dtype) in (jnp.dtype(d) for d in FIXED_POINT_DTYPES)
 
 
 def _as_nhwc(frame: jax.Array) -> Tuple[jax.Array, bool, bool]:
@@ -162,8 +173,11 @@ def _filter2d_impl(frame: jax.Array, coeffs: jax.Array, *, form: str,
                    ) -> jax.Array:
     # fixed-point path (paper: B=8 pixels, DSP48 accumulates at 48 bits):
     # int8/uint8 frames multiply-accumulate in int32 and return int32 —
-    # the caller owns the requantisation, as the FPGA datapath does.
-    if frame.dtype in (jnp.int8, jnp.uint8, jnp.int16):
+    # the caller owns the requantisation, as the FPGA datapath does. The
+    # border constant reaching this point is already quantized against the
+    # *storage* dtype (see quantize_constant), so widening before the
+    # border extension cannot smuggle an unrepresentable c into the frame.
+    if is_fixed_point(frame.dtype):
         frame = frame.astype(jnp.int32)
         coeffs = coeffs.astype(jnp.int32)
     spec = BorderSpec(border_policy)  # constant value applied via gather mask
@@ -182,7 +196,13 @@ def _filter2d_sep_impl(frame: jax.Array, u: jax.Array, v: jax.Array, *,
                        border_policy: str, border_constant: jax.Array
                        ) -> jax.Array:
     """Separable fast path: a w-tap column pass then a w-tap row pass
-    (2w MACs/pixel instead of w²). u filters rows (vertical), v columns."""
+    (2w MACs/pixel instead of w²). u filters rows (vertical), v columns.
+    Fixed-point frames (explicit exact integer factors only — see
+    resolve_separable) widen to int32 here and accumulate exactly."""
+    if is_fixed_point(frame.dtype):
+        frame = frame.astype(jnp.int32)
+        u = u.astype(jnp.int32)
+        v = v.astype(jnp.int32)
     spec = BorderSpec(border_policy)
     frame, add_b, add_c = _as_nhwc(frame)
     B, H, W, C = frame.shape
@@ -210,19 +230,57 @@ def resolve_separable(frame_dtype, coeffs, separable,
     ``separable=False`` never decomposes; ``True`` requires a concrete
     rank-1 float filter (raises otherwise); ``"auto"`` decomposes when it
     can and silently falls back to the full w² form when it can't (traced
-    coefficients, fixed-point frames, non-separable filters).
+    coefficients, fixed-point frames, non-separable filters). An explicit
+    ``separable=(u, v)`` pair of 1D factors always takes the 2w path —
+    the only way fixed-point frames get it, and then only with *integer*
+    factors whose outer product reproduces ``coeffs`` exactly (verified
+    when both are concrete): SVD factors would break bit-exact int32
+    accumulation, so they are never inferred for integer frames.
     """
     if separable is False or separable is None:
         return None
+    if isinstance(separable, (tuple, list)):
+        if len(separable) != 2:
+            raise ValueError("separable=(u, v) takes exactly two 1D factors")
+        u, v = jnp.asarray(separable[0]), jnp.asarray(separable[1])
+        if u.ndim != 1 or v.ndim != 1 or u.shape != v.shape:
+            raise ValueError("separable factors must be same-length 1D "
+                             f"arrays; got {u.shape} and {v.shape}")
+        concrete = not any(isinstance(a, jax.core.Tracer)
+                           for a in (coeffs, u, v))
+        if jnp.issubdtype(jnp.dtype(frame_dtype), jnp.integer):
+            if not (jnp.issubdtype(u.dtype, jnp.integer)
+                    and jnp.issubdtype(v.dtype, jnp.integer)):
+                raise ValueError(
+                    "fixed-point frames take the separable path only with "
+                    "an exact *integer* rank-1 factorization; got factor "
+                    f"dtypes {u.dtype}/{v.dtype}")
+            if concrete and not np.array_equal(
+                    np.outer(np.asarray(u), np.asarray(v)),
+                    np.asarray(coeffs)):
+                raise ValueError(
+                    "separable=(u, v) does not factor coeffs exactly; the "
+                    "fixed-point path must stay bit-exact with the w² form")
+        elif concrete and not np.allclose(
+                np.outer(np.asarray(u, np.float64),
+                         np.asarray(v, np.float64)),
+                np.asarray(coeffs, np.float64), rtol=1e-4, atol=1e-6):
+            raise ValueError(
+                "separable=(u, v) does not factor coeffs (outer(u, v) != "
+                "coeffs); traced factors skip this check for "
+                "runtime-swapped pipelines")
+        return u, v
     if separable not in (True, "auto"):
         raise ValueError(
-            f"separable must be 'auto', True or False; got {separable!r}")
+            f"separable must be 'auto', True, False or a (u, v) pair; "
+            f"got {separable!r}")
     strict = separable is True
     if jnp.issubdtype(jnp.dtype(frame_dtype), jnp.integer):
         if strict:
             raise NotImplementedError(
-                "separable fast path is float-only; fixed-point frames "
-                "accumulate exactly in int32 via the w² form")
+                "separable fast path needs an explicit exact integer "
+                "factorization for fixed-point frames: pass "
+                "separable=(u, v); SVD detection is float-only")
         return None
     if isinstance(coeffs, jax.core.Tracer):
         if strict:
@@ -252,15 +310,18 @@ def filter2d(frame: jax.Array, coeffs: jax.Array, *, form: str = "direct",
     """
     if form not in FORMS:
         raise ValueError(f"unknown form {form!r}; choose from {FORMS}")
+    # the constant is quantized against the *storage* dtype before any
+    # widening — one rule shared with the Pallas halo plan and the
+    # streaming/distributed executors.
+    qc = jnp.asarray(quantize_constant(border.constant, frame.dtype))
     uv = resolve_separable(frame.dtype, coeffs, separable)
     if uv is not None:
         return _filter2d_sep_impl(
             frame, jnp.asarray(uv[0]), jnp.asarray(uv[1]),
-            border_policy=border.policy,
-            border_constant=jnp.asarray(border.constant))
+            border_policy=border.policy, border_constant=qc)
     return _filter2d_impl(frame, coeffs, form=form,
                           border_policy=border.policy,
-                          border_constant=jnp.asarray(border.constant))
+                          border_constant=qc)
 
 
 def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
@@ -273,7 +334,8 @@ def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
     Integer frames follow the fixed-point contract of :func:`filter2d`:
     multiply-accumulate in int32, int32 out.
     """
-    if frame.dtype in (jnp.int8, jnp.uint8, jnp.int16):
+    qc = quantize_constant(border.constant, frame.dtype)
+    if is_fixed_point(frame.dtype):
         frame = frame.astype(jnp.int32)
         bank = bank.astype(jnp.int32)
     frame_n, add_b, add_c = _as_nhwc(frame)
@@ -287,7 +349,7 @@ def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
         # one extension serves the whole bank (constant included): the
         # input is read ONCE for all N filters, matching the Pallas path
         xp = _extend_policy(frame_n, r, border.policy,
-                            jnp.asarray(border.constant, frame_n.dtype))
+                            jnp.asarray(qc, frame_n.dtype))
     Ho, Wo = out_shape(H, W, w, spec)
     planes = jnp.stack(
         [_shifted(xp, i, j, Ho, Wo) for i in range(w) for j in range(w)],

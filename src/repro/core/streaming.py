@@ -22,14 +22,17 @@ scratch and in-kernel halo DMA (``kernels/filter2d/halo``).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.border_spec import quantize_constant
 from repro.core.borders import BorderSpec, gather_rows
-from repro.core.filter2d import FORMS, _FORM_FNS, _as_nhwc, _un_nhwc, filter2d
+from repro.core.filter2d import (FORMS, _FORM_FNS, _as_nhwc, _un_nhwc,
+                                 filter2d, is_fixed_point)
 
 
 def strip_height_for_vmem(width: int, channels: int, w: int,
@@ -61,6 +64,14 @@ def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
     spec = border if border is not None else BorderSpec(border_policy)
     if spec.policy == "neglect":
         raise ValueError("streaming path does not support 'neglect'")
+    # fixed-point: quantize constant(c) against the *storage* dtype first
+    # (the shared rule), then run the stream in the int32 accumulator
+    # dtype — bit-exact with core.filter2d and the Pallas kernels.
+    if is_fixed_point(frame.dtype):
+        spec = dataclasses.replace(
+            spec, constant=quantize_constant(spec.constant, frame.dtype))
+        frame = frame.astype(jnp.int32)
+        coeffs = coeffs.astype(jnp.int32)
     x, add_b, add_c = _as_nhwc(frame)
     B, H, W, C = x.shape
     w = coeffs.shape[-1]

@@ -47,14 +47,27 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.filter2d import is_fixed_point
 from repro.kernels._compat import CompilerParams
 from repro.kernels.filter2d import halo
 from repro.kernels.filter2d.halo import HaloPlan
 
 LANE = halo.LANE  # TPU lane width: last-dim alignment target
+
+
+def acc_dtype(storage_dtype):
+    """The accumulator/output dtype for a given frame storage dtype.
+
+    Fixed-point frames (int8/uint8/int16) stream and sit in VMEM at their
+    narrow width but multiply-accumulate and write back in int32 — the
+    paper's B=8 pixels onto wide DSP48 accumulation. Float frames
+    accumulate at their own width.
+    """
+    return jnp.int32 if is_fixed_point(storage_dtype) else storage_dtype
 
 
 def _reduce_taps(ext, coeffs, Ho: int, Wo: int, w: int, form: str):
@@ -138,7 +151,10 @@ def _halo_kernel(x_ref, c_ref, o_ref, ext_ref, sem, *, plan: HaloPlan,
     def _fill_scratch():
         halo.fill_ext(x_ref.at[m], ext_ref, sem, i, j, plan)
 
-    ext = ext_ref[...]
+    # fixed-point: the scratch holds the narrow storage dtype (the DMA'd
+    # bytes stay 1-2 per pixel); the widening to the int32 accumulator
+    # happens here, on the register-level read feeding the MAC.
+    ext = ext_ref[...].astype(o_ref.dtype)
     S, Tw = o_ref.shape[-2:]
     if form == "separable":
         y = _reduce_separable(ext, c_ref[0, 0], c_ref[0, 1], S, Tw, w)
@@ -152,9 +168,14 @@ def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
     """Streaming 2D filter with in-kernel border management.
 
     planes: [M, H, W] raw (un-tiled, un-extended) frame planes — the only
-    HBM-resident input. coeffs: [N, w, w] filter bank (or [N, 2, w] row/col
-    factors for ``form='separable'``). Returns [M, N, Ho_pad, Wo_pad] with
-    Ho_pad = n_strips·S, Wo_pad = n_tiles·Tw (callers crop).
+    HBM-resident input, streamed at its *storage* dtype (int8/uint8/int16
+    frames move 1-2 bytes/pixel through HBM and VMEM; the paper's narrow
+    pixel bus). coeffs: [N, w, w] filter bank (or [N, 2, w] row/col factors
+    for ``form='separable'``) — int32 for fixed-point frames. Returns
+    [M, N, Ho_pad, Wo_pad] with Ho_pad = n_strips·S, Wo_pad = n_tiles·Tw
+    (callers crop), at ``acc_dtype(planes.dtype)``: int32 for fixed-point
+    storage (exact accumulation; the caller requantises), else the frame
+    dtype.
 
     The grid is (M, n_tiles, n_strips, N): filters innermost so each
     scratch fill serves the whole bank; planes and column tiles are
@@ -173,7 +194,7 @@ def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
     return pl.pallas_call(
         functools.partial(_halo_kernel, plan=plan, form=form, w=w),
         out_shape=jax.ShapeDtypeStruct((M, N, n_i * S, n_j * Tw),
-                                       planes.dtype),
+                                       acc_dtype(planes.dtype)),
         grid=(M, n_j, n_i, N),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
@@ -194,7 +215,8 @@ def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
 def stream_vmem_working_set(strip_h: int, tile_w: int, w: int,
                             dtype_bytes: int = 4, *,
                             separable: bool = False,
-                            num_filters: int = 1) -> int:
+                            num_filters: int = 1,
+                            acc_dtype_bytes: int = None) -> int:
     """Bytes resident in VMEM per stream grid step (the row-buffer bound).
 
     The halo-extended scratch + the output tile + the coefficient file. A
@@ -203,11 +225,19 @@ def stream_vmem_working_set(strip_h: int, tile_w: int, w: int,
     halo engine halved the old bound: the scratch doubles as strip buffer
     AND line buffer, and the input tile no longer needs a second VMEM
     block — it is DMA'd from HBM directly into the scratch.)
+
+    Dtype-aware: ``dtype_bytes`` is the *storage* width (the scratch the
+    DMA fills), ``acc_dtype_bytes`` the accumulator/output width (defaults
+    to the storage width — pass 4 for the fixed-point int8/int16-in,
+    int32-out datapath, where the scratch shrinks 4×/2× but the output
+    tile and coefficient file stay wide).
     """
+    if acc_dtype_bytes is None:
+        acc_dtype_bytes = dtype_bytes
     r = (w - 1) // 2
     ew = tile_w + 2 * r
     ew += (-ew) % LANE                   # lane padding, as the plan lays out
     ext_scratch = (strip_h + 2 * r) * ew * dtype_bytes
-    out_tile = strip_h * tile_w * dtype_bytes
-    coeff = num_filters * (2 * w if separable else w * w) * dtype_bytes
+    out_tile = strip_h * tile_w * acc_dtype_bytes
+    coeff = num_filters * (2 * w if separable else w * w) * acc_dtype_bytes
     return ext_scratch + out_tile + coeff

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.border_spec import BorderSpec
-from repro.core.filter2d import resolve_separable
+from repro.core.filter2d import is_fixed_point, resolve_separable
 from repro.kernels.filter2d import halo
 from repro.kernels.filter2d import kernel as K
 
@@ -106,7 +106,10 @@ def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array, *,
     else:
         raise ValueError(regime)
 
-    plan = halo.make_plan(H, W, w, border, S, Tw)
+    # the plan carries the *storage* dtype: byte accounting and the
+    # quantized constant(c) both follow the narrow stream, not the
+    # int32 accumulator.
+    plan = halo.make_plan(H, W, w, border, S, Tw, dtype=planes.dtype)
     y = K.filter2d_halo(planes, coeffs, plan, form=form, interpret=interpret)
     return y[:, :, :Ho, :Wo]
 
@@ -114,13 +117,19 @@ def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array, *,
 def _coeff_operand(frame: jax.Array, coeffs: jax.Array, form: str,
                    separable) -> Tuple[jax.Array, str]:
     """Resolve the separable knob into the kernel coefficient operand:
-    [1, w, w] for the 2D forms, [1, 2, w] (u, v) for the fused fast path."""
+    [1, w, w] for the 2D forms, [1, 2, w] (u, v) for the fused fast path.
+    Fixed-point frames take int32 coefficients (the wide MAC operand,
+    mirroring core.filter2d); the frame itself stays at storage width."""
     uv = resolve_separable(frame.dtype, coeffs, separable)
+    cdtype = jnp.int32 if is_fixed_point(frame.dtype) else frame.dtype
     if uv is None:
-        return jnp.asarray(coeffs)[None], form
-    # resolve_separable only yields factors for floating frames
+        co = jnp.asarray(coeffs)[None]
+        return (co.astype(jnp.int32) if is_fixed_point(frame.dtype)
+                else co), form
+    # factors: SVD-detected for float frames, or the caller's explicit
+    # exact (u, v) — the only route for fixed-point frames
     return jnp.stack([jnp.asarray(uv[0]), jnp.asarray(uv[1])]).astype(
-        frame.dtype)[None], "separable"
+        cdtype)[None], "separable"
 
 
 def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
@@ -139,7 +148,16 @@ def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
     ``constant(c)``, ``replicate``, ``reflect``, ``mirror_dup``, ``wrap``,
     ``neglect``) are resolved natively inside the kernel by the halo
     engine — no fallback path. ``separable='auto'`` routes rank-1 filters
-    through the fused 2w-MAC row/column-pass kernel.
+    through the fused 2w-MAC row/column-pass kernel; ``separable=(u, v)``
+    supplies explicit factors (the only separable route for fixed-point
+    frames, which need an exact integer factorization).
+
+    Fixed-point contract (paper §IV, B=8): int8/uint8/int16 frames stream
+    through HBM, the halo DMAs and the VMEM scratch at their 1-2 byte
+    storage width — every border policy muxes on the integer dtype, with
+    ``constant(c)`` quantized to it — widen to int32 only at the MAC, and
+    return int32 bit-exact with ``core.filter2d``. The caller owns
+    requantisation.
     """
     interpret = _default_interpret() if interpret is None else interpret
     planes, tag = _fold_planes(frame)
@@ -160,11 +178,16 @@ def filter_bank_pallas(frame: jax.Array, bank: jax.Array, *,
     output [..., N]. The filter dim is a kernel grid dimension — the halo
     scratch is filled once per (plane, tile, strip) and reused for all N
     coefficient sets (the paper's coefficient file, folded into the grid),
-    under every border policy.
+    under every border policy. Fixed-point frames follow the contract of
+    :func:`filter2d_pallas`: narrow storage end-to-end, one int32
+    accumulator per bank filter, int32 out.
     """
     interpret = _default_interpret() if interpret is None else interpret
     planes, tag = _fold_planes(frame)
-    y = _filter2d_pallas_planes(planes, jnp.asarray(bank), form=form,
+    bank = jnp.asarray(bank)
+    if is_fixed_point(frame.dtype):
+        bank = bank.astype(jnp.int32)
+    y = _filter2d_pallas_planes(planes, bank, form=form,
                                 border=border, regime=regime,
                                 strip_h=strip_h, tile_w=tile_w,
                                 interpret=interpret)

@@ -1,0 +1,119 @@
+"""The CI bench-regression gate's comparator, unit-tested.
+
+The acceptance case: an injected 20% pixel-rate regression (above the 15%
+budget) must fail the gate; structural byte metrics fail on ANY increase.
+"""
+import json
+
+from benchmarks.compare import compare, index_rows, main
+
+
+def _payload(rows):
+    return {"schema": "bench_trajectory_v1", "rows": rows}
+
+
+def _row(name, rate=1e6, bpp=8.2, read_bpp=4.2, **extra):
+    r = {"name": name, "us_per_call": 100.0, "pixels_per_s": rate,
+         "hbm_bytes_per_pixel": bpp, "hbm_read_bytes_per_pixel": read_bpp}
+    r.update(extra)
+    return r
+
+
+BASE = _payload([_row("pallas_halo/direct/mirror"),
+                 _row("pallas_halo/direct/wrap"),
+                 _row("pallas_halo/direct/mirror/int8",
+                      bpp=5.05, read_bpp=1.05),
+                 {"name": "table8/neglect", "us_per_call": 50.0,
+                  "hlo_flops": 1e8}])
+
+
+def test_identical_records_pass():
+    failures, _ = compare(BASE, BASE)
+    assert failures == []
+
+
+def test_injected_20pct_rate_regression_fails():
+    cur = _payload([_row("pallas_halo/direct/mirror", rate=0.8e6),
+                    _row("pallas_halo/direct/wrap"),
+                    _row("pallas_halo/direct/mirror/int8",
+                         bpp=5.05, read_bpp=1.05),
+                    {"name": "table8/neglect", "us_per_call": 50.0,
+                     "hlo_flops": 1e8}])
+    failures, _ = compare(BASE, cur)
+    assert len(failures) == 1
+    assert "pixels_per_s" in failures[0]
+    assert "pallas_halo/direct/mirror" in failures[0]
+
+
+def test_10pct_rate_drop_within_budget_passes():
+    cur = _payload([_row("pallas_halo/direct/mirror", rate=0.9e6),
+                    _row("pallas_halo/direct/wrap"),
+                    _row("pallas_halo/direct/mirror/int8",
+                         bpp=5.05, read_bpp=1.05),
+                    {"name": "table8/neglect", "us_per_call": 50.0,
+                     "hlo_flops": 1e8}])
+    failures, _ = compare(BASE, cur)
+    assert failures == []
+
+
+def test_any_bytes_per_pixel_increase_fails():
+    """The int8 lane silently widening back to float traffic must trip the
+    gate even with pixel rate unchanged."""
+    cur = _payload([_row("pallas_halo/direct/mirror"),
+                    _row("pallas_halo/direct/wrap"),
+                    _row("pallas_halo/direct/mirror/int8",
+                         bpp=8.2, read_bpp=4.2),
+                    {"name": "table8/neglect", "us_per_call": 50.0,
+                     "hlo_flops": 1e8}])
+    failures, _ = compare(BASE, cur)
+    assert len(failures) == 2             # total AND read-side bytes
+    assert all("int8" in f for f in failures)
+
+
+def test_vanished_and_errored_rows_fail():
+    cur = _payload([_row("pallas_halo/direct/mirror"),
+                    {"name": "pallas_halo/direct/wrap",
+                     "error": "RuntimeError:boom"},
+                    _row("pallas_halo/direct/mirror/int8",
+                         bpp=5.05, read_bpp=1.05)])
+    failures, _ = compare(BASE, cur)
+    msgs = "\n".join(failures)
+    assert "errored in current run" in msgs
+    assert "vanished" in msgs
+
+
+def test_new_rows_seed_without_failing():
+    cur = _payload(BASE["rows"] + [_row("pallas_halo/direct/mirror/int16",
+                                        bpp=6.1, read_bpp=2.1)])
+    failures, notes = compare(BASE, cur)
+    assert failures == []
+    assert any("new row" in n for n in notes)
+
+
+def test_error_rows_are_not_indexed():
+    rows = index_rows(_payload([{"name": "x", "error": "E"}, _row("y")]))
+    assert list(rows) == ["y"]
+
+
+def test_cli_missing_baseline_seeds(tmp_path, capsys):
+    cur = tmp_path / "BENCH_smoke.json"
+    cur.write_text(json.dumps(BASE))
+    rc = main(["--baseline", str(tmp_path / "nope.json"),
+               "--current", str(cur)])
+    assert rc == 0
+    assert "seeding" in capsys.readouterr().out
+
+
+def test_cli_end_to_end_regression(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(BASE))
+    cur_payload = _payload([_row("pallas_halo/direct/mirror", rate=0.8e6),
+                            _row("pallas_halo/direct/wrap"),
+                            _row("pallas_halo/direct/mirror/int8",
+                                 bpp=5.05, read_bpp=1.05),
+                            {"name": "table8/neglect", "us_per_call": 50.0,
+                             "hlo_flops": 1e8}])
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(cur_payload))
+    assert main(["--baseline", str(base), "--current", str(cur)]) == 1
+    assert main(["--baseline", str(base), "--current", str(base)]) == 0

@@ -1,0 +1,119 @@
+"""Mosaic lowering dry-run: ``interpret=False`` compile checks, no TPU.
+
+Tier-1 exercises every kernel in ``interpret=True`` (bit-accurate Python
+execution); what it cannot catch is a kernel that *interprets* fine but no
+longer lowers to Mosaic — an unsupported op, a bad scratch dtype, a DMA
+shape the compiler rejects. ``jax.export`` with ``platforms=('tpu',)``
+runs the whole jit→StableHLO→Mosaic pipeline on the CPU host (the kernel
+body is lowered to the ``tpu_custom_call`` payload) without needing a
+device, so a lowering break surfaces here in ~2 min — and in CI's
+dedicated ``tpu-lowering`` lane — instead of inside the 45-min tier-1 run.
+
+Float and fixed-point datapaths both lower: the int8/int16 entries are
+the narrow-storage (int-scratch, int32-MAC) kernels of the fixed-point
+tentpole. What this does NOT prove: Mosaic *execution* — that still needs
+a real-TPU runner (ROADMAP).
+"""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import export as jax_export
+
+from repro.core.border_spec import BorderSpec
+from repro.kernels.dwconv1d import dwconv1d_pallas
+from repro.kernels.filter2d import filter2d_pallas, filter_bank_pallas
+from repro.kernels.swattn import swattn_pallas
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _assert_lowers(fn, *args):
+    """Export for TPU and check the Mosaic kernel actually made it in."""
+    try:
+        exp = jax_export.export(jax.jit(fn), platforms=("tpu",))(*args)
+    except Exception as e:  # noqa: BLE001 - any failure = lowering break
+        pytest.fail(f"Mosaic lowering failed: {type(e).__name__}: {e}")
+    assert "tpu_custom_call" in exp.mlir_module()
+
+
+FRAME = _sds((128, 256), jnp.float32)
+K5 = _sds((5, 5), jnp.float32)
+
+
+@pytest.mark.parametrize("form,policy", [
+    ("direct", "mirror"), ("transposed", "duplicate"), ("tree", "constant"),
+    ("compress", "neglect"), ("direct", "wrap"), ("direct", "mirror_dup"),
+])
+def test_filter2d_float_lowers(form, policy):
+    _assert_lowers(
+        functools.partial(filter2d_pallas, form=form,
+                          border=BorderSpec(policy, 2.0), regime="stream",
+                          strip_h=64, tile_w=128, interpret=False),
+        FRAME, K5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.uint8, jnp.int16])
+@pytest.mark.parametrize("policy", ["mirror", "wrap", "constant"])
+def test_filter2d_fixed_point_lowers(dtype, policy):
+    """The fixed-point datapath: int storage scratch, int32 accumulate."""
+    _assert_lowers(
+        functools.partial(filter2d_pallas, border=BorderSpec(policy, 3.0),
+                          regime="stream", strip_h=64, tile_w=128,
+                          interpret=False),
+        _sds((128, 256), dtype), _sds((5, 5), jnp.int32))
+
+
+def test_filter2d_separable_lowers():
+    u = np.array([0.25, 0.5, 0.25], np.float32)
+    _assert_lowers(
+        functools.partial(filter2d_pallas, border=BorderSpec("mirror"),
+                          separable=(u, u), regime="stream", strip_h=64,
+                          tile_w=128, interpret=False),
+        FRAME, _sds((3, 3), jnp.float32))
+
+
+def test_filter2d_separable_fixed_point_lowers():
+    u = np.array([1, 2, 1], np.int32)
+    _assert_lowers(
+        functools.partial(filter2d_pallas, border=BorderSpec("mirror"),
+                          separable=(u, u), regime="stream", strip_h=64,
+                          tile_w=128, interpret=False),
+        _sds((128, 256), jnp.int8), _sds((3, 3), jnp.int32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int8])
+def test_filter_bank_lowers(dtype):
+    cdtype = jnp.int32 if dtype == jnp.int8 else jnp.float32
+    _assert_lowers(
+        functools.partial(filter_bank_pallas, border=BorderSpec("wrap"),
+                          regime="stream", strip_h=64, tile_w=128,
+                          interpret=False),
+        _sds((128, 256), dtype), _sds((3, 5, 5), cdtype))
+
+
+def test_filter2d_small_regime_lowers():
+    _assert_lowers(
+        functools.partial(filter2d_pallas, border=BorderSpec("mirror"),
+                          regime="small", interpret=False),
+        FRAME, K5)
+
+
+def test_dwconv1d_lowers():
+    _assert_lowers(
+        functools.partial(dwconv1d_pallas, chunk=64, interpret=False),
+        _sds((2, 128, 8), jnp.float32), _sds((8, 4), jnp.float32),
+        _sds((8,), jnp.float32))
+
+
+def test_swattn_lowers():
+    _assert_lowers(
+        functools.partial(swattn_pallas, window=64, blk=64,
+                          interpret=False),
+        _sds((1, 256, 4, 64), jnp.float32), _sds((1, 256, 2, 64),
+                                                 jnp.float32),
+        _sds((1, 256, 2, 64), jnp.float32))
