@@ -7,10 +7,16 @@ fused into the stream) costs little and never stalls (no extra pass).
 
 Second table: the Pallas halo engine's form × border matrix — every policy
 (wrap and constant included) resolved in-kernel, with the analytic HBM
-bytes/pixel from the halo plan's read amplification (≈1× frame in + 1×
-out; the pre-materialized layout this replaced paid an extra read+write
-frame pass). Wall time is interpret-mode CPU — trajectory signal only;
-pixels/s on real HW is HBM-bound (see bench_throughput).
+bytes/pixel from the halo plan: ``hbm_read_bytes_per_pixel`` (read
+amplification × storage width), ``hbm_write_bytes_per_pixel`` (one store
+per pixel at the plan's output width) and their ``hbm_bytes_per_pixel``
+round-trip sum. The fixed-point lanes carry the narrow-wordlength story in
+BOTH directions: int8/int16 reads at storage width, and the ``requant``
+lanes (fused scale→round→saturate epilogue) write at storage width too —
+the int8→int8 round trip is asserted ≤ 2.2 bytes/pixel straight from the
+static plan, the paper's B-bit bus closed. Wall time is interpret-mode
+CPU — trajectory signal only; pixels/s on real HW is HBM-bound (see
+bench_throughput).
 """
 from __future__ import annotations
 
@@ -22,12 +28,18 @@ from benchmarks.common import hlo_costs, row, time_call
 from repro.core import filters
 from repro.core.borders import SAME_SIZE_POLICIES, BorderSpec
 from repro.core.filter2d import FORMS, filter2d
+from repro.core.requant import RequantSpec
 from repro.kernels.filter2d import (filter2d_pallas, hbm_bytes_per_pixel,
-                                    make_plan, read_amplification,
+                                    hbm_write_bytes_per_pixel, make_plan,
+                                    read_amplification,
                                     read_bytes_per_pixel)
 
 H, W = 480, 640
 PH, PW = 128, 256        # pallas interpret-mode frame (kept CI-small)
+
+# int8 round-trip budget the requant lanes are pinned to (static plan
+# accounting): ~1.05 read + 1.0 write ≤ 2.2 with margin for wrap's edges.
+INT8_ROUND_TRIP_BUDGET = 2.2
 
 
 def core_rows():
@@ -56,28 +68,32 @@ def core_rows():
     return out
 
 
-def _halo_row(name, x, k, spec, strip_h, tile_w):
+def _plan_metrics(plan) -> str:
+    """The analytic byte triple every pallas_halo row reports (and the CI
+    gate diffs): read side, write side, round trip — all from the plan."""
+    return (f"hbm_bytes_per_pixel={hbm_bytes_per_pixel(plan):.2f};"
+            f"hbm_read_bytes_per_pixel={read_bytes_per_pixel(plan):.3f};"
+            f"hbm_write_bytes_per_pixel={hbm_write_bytes_per_pixel(plan):.2f};"
+            f"read_amplification={read_amplification(plan):.3f}")
+
+
+def _halo_row(name, x, k, spec, strip_h, tile_w, requant=None):
     fn = lambda a, b: filter2d_pallas(a, b, form="direct", border=spec,
                                       regime="stream", strip_h=strip_h,
-                                      tile_w=tile_w)
+                                      tile_w=tile_w, requant=requant)
     us = time_call(fn, x, k)
     plan = make_plan(PH, PW, k.shape[-1], spec, strip_h, tile_w,
-                     dtype=x.dtype)
-    amp = read_amplification(plan)
-    out_bytes = 4                          # float32 / int32 accumulator out
-    return row(
-        name, us,
-        f"pixels_per_s={PH * PW / (us * 1e-6):.3e};"
-        f"hbm_bytes_per_pixel={hbm_bytes_per_pixel(plan, out_bytes):.2f};"
-        f"hbm_read_bytes_per_pixel={read_bytes_per_pixel(plan):.3f};"
-        f"read_amplification={amp:.3f}")
+                     dtype=x.dtype, requant=requant)
+    return row(name, us,
+               f"pixels_per_s={PH * PW / (us * 1e-6):.3e};"
+               + _plan_metrics(plan))
 
 
 def pallas_halo_rows():
     """pixels/s + HBM bytes/pixel per form × border, in-kernel halo path.
-    Byte metrics come from the static halo plan (dtype-aware): the float32
-    rows read ≈4.2 bytes/pixel, the fixed-point rows below read the same
-    frame at storage width."""
+    Byte metrics come from the static halo plan (dtype-aware, both
+    directions): the float32 rows read ≈4.2 and write 4 bytes/pixel; the
+    fixed-point rows below move the same frame at storage width."""
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((PH, PW)).astype(np.float32))
     k = jnp.asarray(filters.gaussian(5))
@@ -92,31 +108,45 @@ def pallas_halo_rows():
             us = time_call(fn, x, k)
             plan = make_plan(PH, PW, 5, spec, strip_h, tile_w,
                              dtype=np.float32)
-            amp = read_amplification(plan)
             out.append(row(
                 f"pallas_halo/{form}/{pol}", us,
                 f"pixels_per_s={PH * PW / (us * 1e-6):.3e};"
-                f"hbm_bytes_per_pixel={hbm_bytes_per_pixel(plan, 4):.2f};"
-                f"hbm_read_bytes_per_pixel={read_bytes_per_pixel(plan):.3f};"
-                f"read_amplification={amp:.3f}"))
+                + _plan_metrics(plan)))
     return out
 
 
 def fixed_point_rows():
     """The paper's §IV narrow-wordlength lanes: int8/int16 frames stream
     at storage width (1-2 HBM bytes read per pixel — the ~4× win over the
-    float32 rows above), accumulate in int32 in-kernel. Every policy runs
-    on the integer dtype, constant(c) quantized."""
+    float32 rows above), accumulate in int32 in-kernel. The plain lanes
+    still write the int32 accumulator (4 bytes/pixel); the ``requant``
+    lanes fuse the scale→round→saturate epilogue and write at storage
+    width — the int8→int8 round trip is asserted ≤ 2.2 bytes/pixel from
+    the plan's static accounting, not from timing."""
     rng = np.random.default_rng(0)
     k = jnp.asarray(rng.integers(-8, 9, (5, 5)).astype(np.int32))
     strip_h, tile_w = 64, 128
     out = []
     for dtype in (np.int8, np.int16):
         x = jnp.asarray(rng.integers(-20, 20, (PH, PW)).astype(dtype))
+        name = np.dtype(dtype).name
+        # the quantised-gain scaler: sum|k| ≤ 200 ⇒ |acc| ≤ 200·127·… fits
+        # the int32 headroom contract at multiplier 3, shift 9
+        rq = RequantSpec(multiplier=3, shift=9, rounding="nearest",
+                         dtype=name)
         for pol in ("neglect",) + SAME_SIZE_POLICIES:
             out.append(_halo_row(
-                f"pallas_halo/direct/{pol}/{np.dtype(dtype).name}",
+                f"pallas_halo/direct/{pol}/{name}",
                 x, k, BorderSpec(pol, 3.0), strip_h, tile_w))
+            out.append(_halo_row(
+                f"pallas_halo/direct/{pol}/{name}/requant",
+                x, k, BorderSpec(pol, 3.0), strip_h, tile_w, requant=rq))
+            plan = make_plan(PH, PW, 5, BorderSpec(pol, 3.0), strip_h,
+                             tile_w, dtype=dtype, requant=rq)
+            if dtype == np.int8:
+                # the acceptance pin: narrow in BOTH directions
+                assert hbm_bytes_per_pixel(plan) <= INT8_ROUND_TRIP_BUDGET, (
+                    pol, hbm_bytes_per_pixel(plan))
     return out
 
 

@@ -10,8 +10,15 @@ CPU-interpret backend. Prints ``name,us_per_call,derived`` CSV.
 ``--json PATH`` additionally writes a machine-readable trajectory record:
 every CSV row parsed into ``{"name", "us_per_call", <derived metrics>}``
 (numbers as numbers), plus run metadata — the ``BENCH_*.json`` artifact CI
-uploads so throughput (pixels/s, HBM bytes/pixel per form × border) can be
-tracked across commits instead of eyeballed in logs.
+uploads so throughput can be tracked across commits instead of eyeballed
+in logs. The per-row byte metrics the CI gate diffs (``benchmarks/
+compare.py``, median-of-N windowed baseline) are all analytic, derived
+from the static halo plan: ``hbm_read_bytes_per_pixel`` (read
+amplification × storage width), ``hbm_write_bytes_per_pixel`` (output
+width — 1 byte for the requantised int8 lanes, 4 for the wide
+accumulator) and their round-trip sum ``hbm_bytes_per_pixel``, so a
+datapath widening on either side of the stream is a one-commit-visible
+regression.
 """
 from __future__ import annotations
 

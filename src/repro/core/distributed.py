@@ -24,13 +24,17 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.border_spec import quantize_constant
 from repro.core.borders import BorderSpec, gather_rows
-from repro.core.filter2d import _FORM_FNS, _as_nhwc, _un_nhwc, is_fixed_point
+from repro.core.filter2d import (_FORM_FNS, _as_nhwc, _un_nhwc,
+                                 apply_requant_spec, is_fixed_point,
+                                 resolve_requant)
+from repro.core.requant import RequantSpec
 
 
 def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
                      axis: str = "data", form: str = "direct",
                      border_policy: str = "mirror",
-                     border: Optional[BorderSpec] = None) -> jax.Array:
+                     border: Optional[BorderSpec] = None,
+                     requant: Optional[RequantSpec] = None) -> jax.Array:
     """Row-shard ``frame`` over ``mesh[axis]`` and filter with halo exchange.
 
     frame: [B,H,W,C] (H divisible by the axis size). Returns same shape.
@@ -39,17 +43,27 @@ def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
     shard's top halo arrives from the last shard (the opposite frame edge),
     which is exactly wrap's semantics. Pass ``border`` (wins over
     ``border_policy``) for non-zero constants.
+
+    Fixed-point frames keep their *storage* dtype through the sharding and
+    the ppermute halo exchange — the ring moves 1-2 wire bytes per halo
+    element, the paper's narrow bus at ICI scale — and widen to the int32
+    accumulator only after the exchange, inside each shard's local MAC.
+    ``requant`` applies the same fused epilogue contract as ``filter2d``
+    per shard, so the ring's *output* tiles (and the gathered result) are
+    storage-width too.
     """
     spec = border if border is not None else BorderSpec(border_policy)
     if spec.policy == "neglect":
         raise ValueError("sharded path does not support 'neglect'")
+    rq = resolve_requant(frame.dtype, requant)
     # fixed-point: quantize constant(c) against the storage dtype (shared
-    # rule), widen to the int32 accumulator, then shard — the ppermute
-    # ring exchanges int32 halo rows and every shard accumulates exactly.
-    if is_fixed_point(frame.dtype):
+    # rule) and keep the frame NARROW — only the coefficients widen here.
+    # The storage-width halo rows cross the ring; each shard widens on the
+    # register read feeding its MAC, exactly like the Pallas kernel.
+    fixed = is_fixed_point(frame.dtype)
+    if fixed:
         spec = dataclasses.replace(
             spec, constant=quantize_constant(spec.constant, frame.dtype))
-        frame = frame.astype(jnp.int32)
         coeffs = coeffs.astype(jnp.int32)
     x, add_b, add_c = _as_nhwc(frame)
     B, H, W, C = x.shape
@@ -59,7 +73,7 @@ def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
     assert H % n_shards == 0 and H // n_shards >= r, (H, n_shards, r)
     if n_shards == 1:
         from repro.core.filter2d import filter2d
-        return filter2d(frame, coeffs, form=form, border=spec)
+        return filter2d(frame, coeffs, form=form, border=spec, requant=rq)
 
     in_specs = (P(None, axis, None, None), P())
     out_specs = P(None, axis, None, None)
@@ -67,7 +81,8 @@ def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
     def local(xs: jax.Array, k: jax.Array) -> jax.Array:
         Hs = xs.shape[1]
         idx = jax.lax.axis_index(axis)
-        # halo exchange: send my top r rows up-neighbour-ward, bottom r down
+        # halo exchange at storage width: send my top r rows
+        # up-neighbour-ward, bottom r down — 2·r·W·C·storage bytes of wire
         fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
         bwd = [(i, (i - 1) % n_shards) for i in range(n_shards)]
         top_from_above = jax.lax.ppermute(xs[:, Hs - r:], axis, fwd)
@@ -88,7 +103,14 @@ def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
         # column halo: plain index remap, local
         wi = jnp.arange(-r, W + r)
         ext = gather_rows(ext, wi, spec, axis=2)
-        return _FORM_FNS[form](ext, k, Hs, W)
+        if fixed:                         # widen at the MAC, not before
+            ext = ext.astype(jnp.int32)
+        y = _FORM_FNS[form](ext, k, Hs, W)
+        if rq is not None:
+            # fused epilogue per shard: the tiles the mesh gathers (or a
+            # downstream ring carries) are requantised, storage-width
+            y = apply_requant_spec(y, rq)
+        return y
 
     fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -37,6 +38,7 @@ import numpy as np
 from repro.core.borders import BorderSpec, extend, out_shape
 from repro.core.border_spec import quantize_constant
 from repro.core.filters import decompose_separable
+from repro.core.requant import RequantSpec
 
 FORMS = ("direct", "transposed", "tree", "compress")
 
@@ -49,6 +51,97 @@ FIXED_POINT_DTYPES = (jnp.int8, jnp.uint8, jnp.int16)
 def is_fixed_point(dtype) -> bool:
     """True for frame dtypes that take the int32-accumulate datapath."""
     return jnp.dtype(dtype) in (jnp.dtype(d) for d in FIXED_POINT_DTYPES)
+
+
+# ---------------------------------------------------------------------------
+# Requantising epilogue (paper §IV: pixels LEAVE at storage width too)
+# ---------------------------------------------------------------------------
+
+
+def resolve_requant(frame_dtype, requant: Optional[RequantSpec],
+                    num_filters: int = 1) -> Optional[RequantSpec]:
+    """Validate the ``requant`` knob against the frame's datapath.
+
+    ``None`` keeps the wide accumulator on the output bus (int32 for
+    fixed-point frames — the pre-epilogue contract). A :class:`RequantSpec`
+    is only meaningful on the fixed-point datapath (there is nothing to
+    requantise on a float stream) and its per-filter multiplier/shift
+    tuples, if any, must match the bank size. Shared by the core oracle,
+    the Pallas wrappers and the streaming/distributed executors so every
+    entry point rejects the same misuses identically.
+    """
+    if requant is None:
+        return None
+    if not isinstance(requant, RequantSpec):
+        raise TypeError(f"requant must be a core.requant.RequantSpec; got "
+                        f"{type(requant).__name__}")
+    if not is_fixed_point(frame_dtype):
+        raise ValueError(
+            "requant is the fixed-point epilogue: frames of dtype "
+            f"{jnp.dtype(frame_dtype).name} accumulate and leave at their "
+            "own width; pass requant=None")
+    requant.params(num_filters)          # validates per-filter lengths
+    return requant
+
+
+def apply_requant(acc: jax.Array, multiplier, shift, *, rounding: str,
+                  out_dtype) -> jax.Array:
+    """The fused scale→round→saturate epilogue, in jnp (int32 in/out ops).
+
+    The jnp twin of ``core.requant.requantize_ref``: identical
+    two's-complement identities (arithmetic shift = floor, masked
+    remainder for ties), so core, streaming, distributed AND the Pallas
+    kernel (which calls this with *traced* per-filter scalars read from
+    its params operand) land bit-identically on the numpy oracle. The
+    caller guarantees ``acc·multiplier`` (+ the half-LSB bias for
+    ``nearest``) fits int32 — the headroom contract the reference asserts.
+    """
+    one = jnp.asarray(1, acc.dtype)
+    zero = jnp.asarray(0, acc.dtype)
+    prod = acc * jnp.asarray(multiplier, acc.dtype)
+    # broadcast the (possibly per-filter, possibly traced-scalar) shift to
+    # the full tile: Mosaic lowers VMEM scalar reads as 0-d vectors, and
+    # mixed 0-d-vector/scalar arithmetic fails verification — tile-shaped
+    # operands keep every op below a plain VPU vector op on both the
+    # interpret and the Mosaic path (XLA folds the splat for static ints).
+    sh = jnp.broadcast_to(jnp.asarray(shift, acc.dtype), prod.shape)
+    shm1 = jnp.maximum(sh - one, zero)   # shift-1, clamped: 1<<(sh-1) @ sh=0
+    if rounding == "truncate":
+        q = jnp.right_shift(prod, sh)
+    elif rounding == "nearest":
+        half = jnp.where(sh > zero, jnp.left_shift(one, shm1), zero)
+        q = jnp.right_shift(prod + half, sh)
+    elif rounding == "nearest_even":
+        base = jnp.right_shift(prod, sh)
+        mask = jnp.left_shift(one, sh) - one
+        rem = jnp.bitwise_and(prod, mask)
+        half = jnp.left_shift(one, shm1)
+        odd = jnp.bitwise_and(base, one) == one
+        up = (rem > half) | ((rem == half) & odd)
+        q = base + jnp.where((sh > zero) & up, one, zero)
+    else:
+        raise ValueError(f"unknown rounding mode {rounding!r}")
+    info = np.iinfo(np.dtype(out_dtype))
+    return jnp.clip(q, info.min, info.max).astype(out_dtype)
+
+
+def apply_requant_spec(y: jax.Array, requant: RequantSpec) -> jax.Array:
+    """The epilogue driven by a spec's own (static) gains — the one call
+    every jnp executor (core impls, streaming strips, distributed shards)
+    makes, so a future spec field is threaded through exactly one place."""
+    return apply_requant(y, requant.multiplier, requant.shift,
+                         rounding=requant.rounding,
+                         out_dtype=requant.np_dtype)
+
+
+def _apply_requant_bank(y: jax.Array, requant: RequantSpec,
+                        num_filters: int) -> jax.Array:
+    """Per-filter epilogue over a bank output with the filter dim LAST."""
+    params = requant.params(num_filters)
+    m = jnp.asarray([p[0] for p in params], jnp.int32)
+    s = jnp.asarray([p[1] for p in params], jnp.int32)
+    return apply_requant(y, m, s, rounding=requant.rounding,
+                         out_dtype=requant.np_dtype)
 
 
 def _as_nhwc(frame: jax.Array) -> Tuple[jax.Array, bool, bool]:
@@ -167,10 +260,11 @@ def _extend_policy(frame: jax.Array, r: int, border_policy: str,
     return extend(frame, r, BorderSpec(border_policy), axes=(1, 2))
 
 
-@functools.partial(jax.jit, static_argnames=("form", "border_policy"))
+@functools.partial(jax.jit,
+                   static_argnames=("form", "border_policy", "requant"))
 def _filter2d_impl(frame: jax.Array, coeffs: jax.Array, *, form: str,
-                   border_policy: str, border_constant: jax.Array
-                   ) -> jax.Array:
+                   border_policy: str, border_constant: jax.Array,
+                   requant: Optional[RequantSpec] = None) -> jax.Array:
     # fixed-point path (paper: B=8 pixels, DSP48 accumulates at 48 bits):
     # int8/uint8 frames multiply-accumulate in int32 and return int32 —
     # the caller owns the requantisation, as the FPGA datapath does. The
@@ -188,13 +282,15 @@ def _filter2d_impl(frame: jax.Array, coeffs: jax.Array, *, form: str,
     xp = _extend_policy(frame, r, border_policy, border_constant)
     Ho, Wo = out_shape(H, W, w, spec)
     y = _FORM_FNS[form](xp, coeffs, Ho, Wo)
+    if requant is not None:
+        y = apply_requant_spec(y, requant)
     return _un_nhwc(y, add_b, add_c)
 
 
-@functools.partial(jax.jit, static_argnames=("border_policy",))
+@functools.partial(jax.jit, static_argnames=("border_policy", "requant"))
 def _filter2d_sep_impl(frame: jax.Array, u: jax.Array, v: jax.Array, *,
-                       border_policy: str, border_constant: jax.Array
-                       ) -> jax.Array:
+                       border_policy: str, border_constant: jax.Array,
+                       requant: Optional[RequantSpec] = None) -> jax.Array:
     """Separable fast path: a w-tap column pass then a w-tap row pass
     (2w MACs/pixel instead of w²). u filters rows (vertical), v columns.
     Fixed-point frames (explicit exact integer factors only — see
@@ -220,7 +316,32 @@ def _filter2d_sep_impl(frame: jax.Array, u: jax.Array, v: jax.Array, *,
     for i in range(w):
         t = jax.lax.dynamic_slice_in_dim(h, i, Ho, axis=1) * u[i]
         y = t if y is None else y + t
+    if requant is not None:
+        y = apply_requant_spec(y, requant)
     return _un_nhwc(y, add_b, add_c)
+
+
+# one-time flag for the separable='auto' traced-coefficient fallback
+# warning (tests reset it via repro.core.filter2d._SEP_AUTO_TRACED_WARNED)
+_SEP_AUTO_TRACED_WARNED = False
+
+
+def _warn_traced_auto_once() -> None:
+    """``separable='auto'`` under jit silently eats the w² cost: SVD rank
+    detection needs concrete coefficients, so every traced call falls back
+    to the full form. Served pipelines should pass explicit
+    ``separable=(u, v)`` factors; warn once per process so they find out."""
+    global _SEP_AUTO_TRACED_WARNED
+    if _SEP_AUTO_TRACED_WARNED:
+        return
+    _SEP_AUTO_TRACED_WARNED = True
+    warnings.warn(
+        "separable='auto' received traced coefficients: SVD rank-1 "
+        "detection runs at trace time and cannot see traced values, so "
+        "this (and every further traced) call silently falls back to the "
+        "full w² form. Pass explicit separable=(u, v) factors to keep "
+        "the 2w-MAC fast path in jitted/served pipelines.",
+        UserWarning, stacklevel=4)
 
 
 def resolve_separable(frame_dtype, coeffs, separable,
@@ -286,6 +407,7 @@ def resolve_separable(frame_dtype, coeffs, separable,
         if strict:
             raise ValueError("separable=True needs concrete coefficients "
                              "(SVD rank detection runs at trace time)")
+        _warn_traced_auto_once()
         return None
     uv = decompose_separable(np.asarray(coeffs), tol=tol)
     if uv is None and strict:
@@ -296,7 +418,8 @@ def resolve_separable(frame_dtype, coeffs, separable,
 
 def filter2d(frame: jax.Array, coeffs: jax.Array, *, form: str = "direct",
              border: BorderSpec = BorderSpec("mirror"),
-             separable=False) -> jax.Array:
+             separable=False,
+             requant: Optional[RequantSpec] = None) -> jax.Array:
     """Apply a runtime `w×w` filter to a frame.
 
     frame: [H,W] | [H,W,C] | [B,H,W,C]. coeffs: [w,w] (traced operand).
@@ -307,9 +430,17 @@ def filter2d(frame: jax.Array, coeffs: jax.Array, *, form: str = "direct",
     SVD and routes them through two 1D passes at 2w MACs/pixel; ``True``
     requires separability (raises otherwise); ``False`` (default) always
     runs the full w² form.
+
+    ``requant``: optional :class:`~repro.core.requant.RequantSpec` —
+    fixed-point frames only. The int32 accumulator is scaled
+    (``·multiplier >> shift``), rounded per the spec's mode and saturated
+    into the spec's storage dtype, so pixels *leave* at storage width too
+    (the paper's B-bit output bus). ``None`` keeps the int32 output and
+    the caller requantises.
     """
     if form not in FORMS:
         raise ValueError(f"unknown form {form!r}; choose from {FORMS}")
+    rq = resolve_requant(frame.dtype, requant)
     # the constant is quantized against the *storage* dtype before any
     # widening — one rule shared with the Pallas halo plan and the
     # streaming/distributed executors.
@@ -318,22 +449,26 @@ def filter2d(frame: jax.Array, coeffs: jax.Array, *, form: str = "direct",
     if uv is not None:
         return _filter2d_sep_impl(
             frame, jnp.asarray(uv[0]), jnp.asarray(uv[1]),
-            border_policy=border.policy, border_constant=qc)
+            border_policy=border.policy, border_constant=qc, requant=rq)
     return _filter2d_impl(frame, coeffs, form=form,
                           border_policy=border.policy,
-                          border_constant=qc)
+                          border_constant=qc, requant=rq)
 
 
 def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
-                border: BorderSpec = BorderSpec("mirror")) -> jax.Array:
+                border: BorderSpec = BorderSpec("mirror"),
+                requant: Optional[RequantSpec] = None) -> jax.Array:
     """Apply N filters in one pass: bank [N,w,w] -> output [..., N].
 
     The multi-filter analogue of the paper's coefficient file: on the MXU
     the N coefficient vectors become the matmul RHS [w², N], so the whole
     bank costs one pass over the frame (input read ONCE for all filters).
     Integer frames follow the fixed-point contract of :func:`filter2d`:
-    multiply-accumulate in int32, int32 out.
+    multiply-accumulate in int32, int32 out — unless ``requant`` gives the
+    bank its per-filter output scalers (multiplier/shift tuples, one entry
+    per filter), in which case each bank lane leaves at storage width.
     """
+    rq = resolve_requant(frame.dtype, requant, num_filters=bank.shape[0])
     qc = quantize_constant(border.constant, frame.dtype)
     if is_fixed_point(frame.dtype):
         frame = frame.astype(jnp.int32)
@@ -356,6 +491,8 @@ def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
         axis=-1)  # [B,Ho,Wo,C,w2]
     y = jnp.einsum("bhwck,kn->bhwcn", planes,
                    bank.reshape(bank.shape[0], -1).T.astype(xp.dtype))
+    if rq is not None:
+        y = _apply_requant_bank(y, rq, bank.shape[0])
     y = _un_nhwc(y, add_b, False)
     if add_c:
         y = y[..., 0, :]

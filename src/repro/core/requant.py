@@ -1,0 +1,183 @@
+"""Requantisation spec + bit-exact numpy reference (paper §IV, the B-bit bus).
+
+The paper's throughput argument closes only when pixels *leave* the
+datapath at storage width too: the MAC tree grows words to the wide
+accumulator (int32 here, 48-bit DSP48 there), and a small requantising
+stage — multiply, shift, round, saturate — brings them back to B bits
+before the output bus. Campos et al. make the same point for
+custom-precision pipelines: wordlength management belongs *inside* the
+datapath, not in a post-pass. This module is the policy half of that
+stage: a hashable :class:`RequantSpec` every entry point eats (usable as a
+``jax.jit`` static argument and baked into the Pallas ``HaloPlan``), plus
+the numpy reference the oracle and every test pin against.
+
+Zero jax imports, like :mod:`repro.core.border_spec`: kernel-side static
+planning (``kernels/filter2d/halo.make_plan``) bakes the spec into the
+hashable plan, and the reference must stay runnable anywhere.
+
+The arithmetic contract (shared verbatim by the numpy reference here, the
+jnp epilogue in ``core.filter2d.apply_requant`` and the in-kernel fused
+stage in ``kernels/filter2d/kernel``):
+
+    prod = acc * multiplier          # int32, caller guarantees headroom
+    q    = round_<mode>(prod / 2**shift)
+    out  = saturate(q, storage_dtype)
+
+``multiplier`` and ``shift`` play the role of the FPGA's output scaler:
+the quantised filter gain ``g ≈ multiplier / 2**shift``. The product (and
+the half-LSB rounding bias for ``nearest``) must fit int32 — the same
+headroom discipline the 48-bit accumulator imposes on the FPGA; the numpy
+reference *asserts* it so a test with out-of-contract parameters fails
+loudly instead of comparing two wraparounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import numpy as np
+
+# Rounding modes of the shift stage. ``truncate`` is the arithmetic
+# right shift (floor — the free FPGA option: drop wires), ``nearest``
+# adds the half LSB first (round half toward +inf — one adder), and
+# ``nearest_even`` ties to even (the DSP48 pattern-detect trick; also
+# what converging accumulation pipelines want to avoid bias).
+ROUNDING_MODES = ("truncate", "nearest", "nearest_even")
+
+# Storage dtypes a requantised stream can leave at (the fixed-point
+# storage set of core.filter2d.FIXED_POINT_DTYPES, by name: the spec is
+# jax-free and hashable, so dtypes live here as canonical name strings).
+STORAGE_DTYPES = ("int8", "uint8", "int16")
+
+_PerFilter = Union[int, Tuple[int, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequantSpec:
+    """The fused output-scaler policy: ``clamp(round((acc·m) >> s))``.
+
+    ``multiplier``/``shift`` may be a single int (one filter, or one
+    scaler shared by a whole bank) or a tuple with one entry per bank
+    filter — the per-filter coefficient-file analogue. ``dtype`` is the
+    *storage* dtype name the stream leaves at. Hashable: usable directly
+    as a jit static argument and baked into the Pallas ``HaloPlan``.
+    """
+
+    multiplier: _PerFilter = 1
+    shift: _PerFilter = 0
+    rounding: str = "nearest"
+    dtype: str = "int8"
+
+    def __post_init__(self):
+        for field in ("multiplier", "shift"):
+            v = getattr(self, field)
+            if isinstance(v, (list, tuple, np.ndarray)):
+                v = tuple(int(x) for x in np.asarray(v).reshape(-1))
+                object.__setattr__(self, field, v)
+            else:
+                object.__setattr__(self, field, int(v))
+        shifts = self.shift if isinstance(self.shift, tuple) else (self.shift,)
+        if any(s < 0 or s > 31 for s in shifts):
+            raise ValueError(f"requant shift must be in [0, 31]; got "
+                             f"{self.shift}")
+        mults = (self.multiplier if isinstance(self.multiplier, tuple)
+                 else (self.multiplier,))
+        if any(abs(m) > 2 ** 31 - 1 for m in mults):
+            raise ValueError("requant multiplier must fit int32; got "
+                             f"{self.multiplier}")
+        if self.rounding not in ROUNDING_MODES:
+            raise ValueError(f"unknown rounding mode {self.rounding!r}; "
+                             f"choose from {ROUNDING_MODES}")
+        name = np.dtype(self.dtype).name
+        if name not in STORAGE_DTYPES:
+            raise ValueError(f"requant storage dtype must be one of "
+                             f"{STORAGE_DTYPES}; got {self.dtype!r}")
+        object.__setattr__(self, "dtype", name)
+
+    @property
+    def np_dtype(self) -> np.dtype:
+        return np.dtype(self.dtype)
+
+    @property
+    def dtype_bytes(self) -> int:
+        return int(self.np_dtype.itemsize)
+
+    @property
+    def num_filters(self) -> int:
+        """Per-filter entries carried (1 when scalar — broadcast)."""
+        n = 1
+        for v in (self.multiplier, self.shift):
+            if isinstance(v, tuple):
+                if n not in (1, len(v)):
+                    raise ValueError("multiplier/shift tuple lengths differ")
+                n = len(v)
+        return n
+
+    def gain_free(self) -> "RequantSpec":
+        """The spec's *static* half: rounding mode and storage dtype, with
+        the runtime gains stripped to placeholders (multiplier 1, shift
+        0). The Pallas wrapper traces/compiles against this — the actual
+        (multiplier, shift) table rides as a traced operand — so swapping
+        gains hits the jit cache instead of recompiling the kernel,
+        exactly like swapping filter coefficients (paper §I)."""
+        return dataclasses.replace(self, multiplier=1, shift=0)
+
+    def params(self, n: int) -> Tuple[Tuple[int, int], ...]:
+        """((multiplier, shift), …) broadcast to ``n`` bank filters."""
+        def bc(v):
+            if isinstance(v, tuple):
+                if len(v) != n:
+                    raise ValueError(
+                        f"requant carries {len(v)} per-filter entries for a "
+                        f"bank of {n} filters")
+                return v
+            return (v,) * n
+        return tuple(zip(bc(self.multiplier), bc(self.shift)))
+
+
+def round_shift_ref(prod: np.ndarray, shift: int, rounding: str
+                    ) -> np.ndarray:
+    """``round_<mode>(prod / 2**shift)`` on int64 numpy values.
+
+    The two's-complement identities the jnp/kernel twins use verbatim:
+    ``>>`` is the arithmetic (floor) shift, ``prod & (2**s - 1)`` the
+    non-negative remainder — so ties land exactly where the hardware adder
+    puts them, for negative products too.
+    """
+    prod = np.asarray(prod, np.int64)
+    if shift == 0:
+        return prod
+    if rounding == "truncate":
+        return prod >> shift
+    half = np.int64(1) << (shift - 1)
+    if rounding == "nearest":
+        return (prod + half) >> shift
+    if rounding == "nearest_even":
+        base = prod >> shift
+        rem = prod & ((np.int64(1) << shift) - 1)
+        up = (rem > half) | ((rem == half) & ((base & 1) == 1))
+        return base + up.astype(np.int64)
+    raise ValueError(rounding)
+
+
+def requantize_ref(acc: np.ndarray, spec: RequantSpec, *,
+                   filter_index: int = 0) -> np.ndarray:
+    """The bit-exact numpy oracle of the fused epilogue.
+
+    ``acc`` is the int32 accumulator plane; the result is the requantised
+    storage-dtype plane. Internally int64 so the headroom contract can be
+    *asserted* rather than silently wrapped: ``|acc·m| (+ half LSB)`` must
+    fit int32, exactly what the in-kernel int32 stage relies on.
+    """
+    m, s = spec.params(max(filter_index + 1, spec.num_filters))[filter_index]
+    acc64 = np.asarray(acc, np.int64)
+    prod = acc64 * np.int64(m)
+    bias = (np.int64(1) << (s - 1)) if (s and spec.rounding == "nearest") \
+        else np.int64(0)
+    lim = np.int64(2 ** 31 - 1)
+    assert np.abs(prod).max(initial=0) + bias <= lim, (
+        "requant headroom violated: |acc * multiplier| (+ rounding bias) "
+        "must fit int32 — pick a smaller multiplier or larger shift")
+    q = round_shift_ref(prod, s, spec.rounding)
+    info = np.iinfo(spec.np_dtype)
+    return np.clip(q, info.min, info.max).astype(spec.np_dtype)

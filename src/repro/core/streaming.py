@@ -32,7 +32,9 @@ import jax.numpy as jnp
 from repro.core.border_spec import quantize_constant
 from repro.core.borders import BorderSpec, gather_rows
 from repro.core.filter2d import (FORMS, _FORM_FNS, _as_nhwc, _un_nhwc,
-                                 filter2d, is_fixed_point)
+                                 apply_requant_spec, filter2d,
+                                 is_fixed_point, resolve_requant)
+from repro.core.requant import RequantSpec
 
 
 def strip_height_for_vmem(width: int, channels: int, w: int,
@@ -47,11 +49,13 @@ def strip_height_for_vmem(width: int, channels: int, w: int,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("form", "border_policy", "strip_h", "border"))
+    jax.jit, static_argnames=("form", "border_policy", "strip_h", "border",
+                              "requant"))
 def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
                        form: str = "direct", border_policy: str = "mirror",
                        strip_h: int = 64,
-                       border: Optional[BorderSpec] = None) -> jax.Array:
+                       border: Optional[BorderSpec] = None,
+                       requant: Optional[RequantSpec] = None) -> jax.Array:
     """Filter a frame strip-by-strip with a carried (w−1)-row buffer.
 
     Semantics identical to ``filter2d(...)`` for every same-size policy
@@ -59,14 +63,19 @@ def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
     ``mirror``, ``mirror_dup``, ``wrap``). Pass a full ``BorderSpec`` via
     ``border`` (wins over ``border_policy``) for non-zero constants. Frame
     height must divide by ``strip_h`` and ``strip_h >= w-1`` (the carry
-    must fit inside one strip).
+    must fit inside one strip). ``requant`` applies the same fused
+    epilogue contract as ``filter2d``: each emitted strip is scaled,
+    rounded and saturated to the spec's storage dtype, so the stream of
+    output strips is storage-width like the input stream.
     """
     spec = border if border is not None else BorderSpec(border_policy)
     if spec.policy == "neglect":
         raise ValueError("streaming path does not support 'neglect'")
+    rq = resolve_requant(frame.dtype, requant)
     # fixed-point: quantize constant(c) against the *storage* dtype first
     # (the shared rule), then run the stream in the int32 accumulator
     # dtype — bit-exact with core.filter2d and the Pallas kernels.
+    src_frame, src_coeffs = frame, coeffs   # pre-widening, for delegation
     if is_fixed_point(frame.dtype):
         spec = dataclasses.replace(
             spec, constant=quantize_constant(spec.constant, frame.dtype))
@@ -79,7 +88,8 @@ def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
     assert H % strip_h == 0 and strip_h >= w - 1, (H, strip_h, w)
     n_strips = H // strip_h
     if n_strips < 2:  # degenerate launch: whole frame is one strip
-        return filter2d(frame, coeffs, form=form, border=spec)
+        return filter2d(src_frame, src_coeffs, form=form, border=spec,
+                        requant=rq)
 
     # Pre-extend columns once (width axis) — the column mux of the window
     # cache. This is index remap, not a padded HBM pass, under jit.
@@ -112,6 +122,10 @@ def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
         ext = jnp.where(i == 0, hi_first, ext)
         ext = jnp.where(i == n_strips - 1, hi_last, ext)
         y = _FORM_FNS[form](ext, coeffs, strip_h, W)
+        if rq is not None:
+            # fused epilogue per emitted strip: the output stream leaves
+            # at storage width, exactly like the Pallas kernel's store
+            y = apply_requant_spec(y, rq)
         new_buf = strip[:, strip_h - r:] if r else row_buf
         return (new_buf, i + 1), y
 

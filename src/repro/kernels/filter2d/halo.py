@@ -44,6 +44,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.border_spec import BorderSpec, min_extent, quantize_constant
+from repro.core.requant import RequantSpec
 
 LANE = 128  # TPU lane width: last-dim alignment target
 
@@ -100,7 +101,13 @@ class HaloPlan:
     the VMEM scratch (``ew`` lane-padded); hashable, closed over by the
     kernel body. ``dtype_bytes`` is the *storage* width the stream moves
     at (1 for int8 frames — the paper's B=8 pixel bus), and ``constant``
-    is already quantized against that storage dtype."""
+    is already quantized against that storage dtype.
+
+    The output side is plan geometry too: ``out_dtype_bytes`` is the
+    width each pixel is *written* at, and ``requant`` (when set) is the
+    fused scale→round→saturate epilogue that narrows the int32
+    accumulator back to storage width before the store — the write-side
+    half of the paper's B-bit bus."""
 
     policy: str
     constant: float
@@ -109,6 +116,8 @@ class HaloPlan:
     eh: int
     ew: int
     dtype_bytes: int = 4
+    out_dtype_bytes: int = 4
+    requant: Optional[RequantSpec] = None
 
 
 def _axis_class(i: int, L: int, B: int, r: int, off: int) -> AxisClass:
@@ -148,19 +157,36 @@ def _axis_plan(L: int, B: int, r: int, same_size: bool) -> AxisPlan:
 
 
 def make_plan(H: int, W: int, w: int, spec: BorderSpec, strip_h: int,
-              tile_w: int, dtype=np.float32) -> HaloPlan:
+              tile_w: int, dtype=np.float32,
+              requant: Optional[RequantSpec] = None) -> HaloPlan:
     """Build the static halo plan for an (H, W) frame, w×w window, strip
     height ``strip_h`` and lane-aligned tile width ``tile_w``. ``dtype``
     is the frame's *storage* dtype: it sets the plan's byte accounting
     (``read_bytes_per_pixel``) and quantizes the ``constant(c)`` border
     value to what the narrow stream can actually hold — the same shared
-    rule (``border_spec.quantize_constant``) the core oracle applies."""
+    rule (``border_spec.quantize_constant``) the core oracle applies.
+
+    ``requant`` bakes the fused output scaler into the plan: integer
+    frames then *write* at the spec's storage width instead of the int32
+    accumulator's 4 bytes (``out_dtype_bytes`` follows suit — the number
+    ``hbm_write_bytes_per_pixel`` reports). Float frames take no requant.
+    """
     r = (w - 1) // 2
     need = min_extent(spec, r)
     if min(H, W) < need:
         raise ValueError(f"policy {spec.policy!r} with radius {r} needs "
                          f"frames of at least {need} rows/cols; got "
                          f"{(H, W)}")
+    integer = np.dtype(dtype).kind in ("i", "u")
+    if requant is not None and not integer:
+        raise ValueError("requant is the fixed-point epilogue; "
+                         f"storage dtype {np.dtype(dtype).name} takes none")
+    if requant is not None:
+        out_bytes = requant.dtype_bytes
+    elif integer:
+        out_bytes = 4                      # int32 accumulator write-back
+    else:
+        out_bytes = int(np.dtype(dtype).itemsize)
     rows = _axis_plan(H, strip_h, r, spec.same_size)
     cols = _axis_plan(W, tile_w, r, spec.same_size)
     eh = rows.block + 2 * r
@@ -169,7 +195,8 @@ def make_plan(H: int, W: int, w: int, spec: BorderSpec, strip_h: int,
     return HaloPlan(policy=spec.policy,
                     constant=quantize_constant(spec.constant, dtype),
                     rows=rows, cols=cols, eh=eh, ew=ew,
-                    dtype_bytes=int(np.dtype(dtype).itemsize))
+                    dtype_bytes=int(np.dtype(dtype).itemsize),
+                    out_dtype_bytes=out_bytes, requant=requant)
 
 
 def read_amplification(plan: HaloPlan) -> float:
@@ -201,11 +228,26 @@ def read_bytes_per_pixel(plan: HaloPlan) -> float:
     return read_amplification(plan) * plan.dtype_bytes
 
 
-def hbm_bytes_per_pixel(plan: HaloPlan, out_dtype_bytes: int) -> float:
-    """Total HBM traffic per pixel: the read side from the plan (storage
-    dtype × read amplification) plus one output write at the accumulator
-    width (int32 for fixed-point frames — the caller requantises, so the
-    write-back is 4 bytes until a requantising epilogue exists)."""
+def hbm_write_bytes_per_pixel(plan: HaloPlan) -> float:
+    """HBM bytes *written* per output pixel — the write-side twin of
+    ``read_bytes_per_pixel``, from the same static plan. One store per
+    output pixel at ``out_dtype_bytes``: 4 for the wide accumulator
+    (int32 / float32), the storage width when the plan carries a
+    requantising epilogue — an int8-in/int8-out plan writes 1 byte/pixel,
+    closing the paper's B-bit bus in BOTH directions."""
+    return float(plan.out_dtype_bytes)
+
+
+def hbm_bytes_per_pixel(plan: HaloPlan,
+                        out_dtype_bytes: Optional[int] = None) -> float:
+    """Total HBM round-trip traffic per pixel: the read side from the plan
+    (storage dtype × read amplification) plus one output write at the
+    plan's write width (``out_dtype_bytes`` overrides — kept for callers
+    accounting a different epilogue than the plan's). An int8 frame with
+    an int8 requant epilogue rounds to ≈2 bytes/pixel where the
+    pre-epilogue datapath paid ≈5."""
+    if out_dtype_bytes is None:
+        out_dtype_bytes = plan.out_dtype_bytes
     return read_bytes_per_pixel(plan) + float(out_dtype_bytes)
 
 

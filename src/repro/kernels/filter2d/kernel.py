@@ -45,13 +45,14 @@ w-tap row pass (2w MACs/pixel instead of w²).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.filter2d import is_fixed_point
+from repro.core.filter2d import apply_requant, is_fixed_point
 from repro.kernels._compat import CompilerParams
 from repro.kernels.filter2d import halo
 from repro.kernels.filter2d.halo import HaloPlan
@@ -60,14 +61,25 @@ LANE = halo.LANE  # TPU lane width: last-dim alignment target
 
 
 def acc_dtype(storage_dtype):
-    """The accumulator/output dtype for a given frame storage dtype.
+    """The accumulator dtype for a given frame storage dtype.
 
     Fixed-point frames (int8/uint8/int16) stream and sit in VMEM at their
-    narrow width but multiply-accumulate and write back in int32 — the
-    paper's B=8 pixels onto wide DSP48 accumulation. Float frames
-    accumulate at their own width.
+    narrow width but multiply-accumulate in int32 — the paper's B=8
+    pixels onto wide DSP48 accumulation. Float frames accumulate at
+    their own width.
     """
     return jnp.int32 if is_fixed_point(storage_dtype) else storage_dtype
+
+
+def out_dtype(plan: HaloPlan, storage_dtype):
+    """The dtype each output pixel is *stored* at — plan geometry, not an
+    invariant: the accumulator dtype, unless the plan carries a
+    requantising epilogue, in which case the fused scale→round→saturate
+    stage narrows the int32 accumulator back to the spec's storage dtype
+    before the store (the write-side half of the B-bit bus)."""
+    if plan.requant is not None:
+        return jnp.dtype(plan.requant.dtype)
+    return acc_dtype(storage_dtype)
 
 
 def _reduce_taps(ext, coeffs, Ho: int, Wo: int, w: int, form: str):
@@ -132,8 +144,7 @@ def _reduce_separable(ext, u, v, Ho: int, Wo: int, w: int):
 # ---------------------------------------------------------------------------
 
 
-def _halo_kernel(x_ref, c_ref, o_ref, ext_ref, sem, *, plan: HaloPlan,
-                 form: str, w: int):
+def _halo_kernel(x_ref, c_ref, *rest, plan: HaloPlan, form: str, w: int):
     """Grid step (m, j, i, f): fill the scratch with strip i of tile j
     (in-frame DMA + border mux) at the bank's first filter step, then
     reduce the taps for filter f.
@@ -142,7 +153,18 @@ def _halo_kernel(x_ref, c_ref, o_ref, ext_ref, sem, *, plan: HaloPlan,
     the kernel's own DMA is the only reader, so the stream is read-once
     from HBM (plus the 2r strip overlap). The scratch persists across the
     innermost (filter) steps: the coefficient-file read-once property.
+
+    When the plan carries a requantising epilogue, ``rest`` leads with
+    ``q_ref`` — the [N, 2] (multiplier, shift) scaler table in SMEM
+    (scalar memory, where Mosaic wants dynamically-indexed scalars),
+    runtime data exactly like the coefficients (one compiled executable
+    serves every gain) — and the int32 accumulator is fused through
+    scale→round→saturate down to the storage dtype before the store.
     """
+    if plan.requant is not None:
+        q_ref, o_ref, ext_ref, sem = rest
+    else:
+        q_ref, (o_ref, ext_ref, sem) = None, rest
     m = pl.program_id(0)
     j = pl.program_id(1)
     i = pl.program_id(2)
@@ -154,16 +176,25 @@ def _halo_kernel(x_ref, c_ref, o_ref, ext_ref, sem, *, plan: HaloPlan,
     # fixed-point: the scratch holds the narrow storage dtype (the DMA'd
     # bytes stay 1-2 per pixel); the widening to the int32 accumulator
     # happens here, on the register-level read feeding the MAC.
-    ext = ext_ref[...].astype(o_ref.dtype)
+    adt = jnp.int32 if plan.requant is not None else o_ref.dtype
+    ext = ext_ref[...].astype(adt)
     S, Tw = o_ref.shape[-2:]
     if form == "separable":
         y = _reduce_separable(ext, c_ref[0, 0], c_ref[0, 1], S, Tw, w)
     else:
         y = _reduce_taps(ext, c_ref[0], S, Tw, w, form)
+    if plan.requant is not None:
+        # the fused epilogue: word growth managed inside the datapath, so
+        # the store (and the HBM write behind it) is storage-width again
+        f = pl.program_id(3)
+        y = apply_requant(y, q_ref[f, 0], q_ref[f, 1],
+                          rounding=plan.requant.rounding,
+                          out_dtype=o_ref.dtype)
     o_ref[0, 0] = y
 
 
 def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
+                  q_params: Optional[jax.Array] = None,
                   form: str = "direct", interpret: bool = True) -> jax.Array:
     """Streaming 2D filter with in-kernel border management.
 
@@ -173,9 +204,10 @@ def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
     pixel bus). coeffs: [N, w, w] filter bank (or [N, 2, w] row/col factors
     for ``form='separable'``) — int32 for fixed-point frames. Returns
     [M, N, Ho_pad, Wo_pad] with Ho_pad = n_strips·S, Wo_pad = n_tiles·Tw
-    (callers crop), at ``acc_dtype(planes.dtype)``: int32 for fixed-point
-    storage (exact accumulation; the caller requantises), else the frame
-    dtype.
+    (callers crop), at ``out_dtype(plan, planes.dtype)``: the plan's
+    requant storage dtype when it carries the fused epilogue (narrow in
+    BOTH directions), else int32 for fixed-point storage (exact
+    accumulation; the caller requantises), else the frame dtype.
 
     The grid is (M, n_tiles, n_strips, N): filters innermost so each
     scratch fill serves the whole bank; planes and column tiles are
@@ -191,15 +223,30 @@ def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
     S, Tw = plan.rows.block, plan.cols.block
     n_i, n_j = plan.rows.n, plan.cols.n
     c_block = (1, 2, w) if form == "separable" else (1, w, w)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        pl.BlockSpec(c_block, lambda m, jj, ii, f: (f, 0, 0)),
+    ]
+    operands = [planes, coeffs]
+    name = f"filter2d_halo_{form}_{plan.policy}"
+    if plan.requant is not None:
+        # per-filter (multiplier, shift) output scalers ride as a [N, 2]
+        # runtime operand in SMEM — scalar parameters, dynamically indexed
+        # by the filter grid dim, like the coefficient file: one compiled
+        # executable serves every gain (``q_params`` is traced; the
+        # wrapper compiles against the gain-free spec). Direct callers
+        # may omit ``q_params`` and take the plan spec's own gains.
+        if q_params is None:
+            q_params = jnp.asarray(plan.requant.params(N), jnp.int32)
+        operands.append(q_params)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.SMEM))
+        name += f"_requant_{plan.requant.rounding}"
     return pl.pallas_call(
         functools.partial(_halo_kernel, plan=plan, form=form, w=w),
         out_shape=jax.ShapeDtypeStruct((M, N, n_i * S, n_j * Tw),
-                                       acc_dtype(planes.dtype)),
+                                       out_dtype(plan, planes.dtype)),
         grid=(M, n_j, n_i, N),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-            pl.BlockSpec(c_block, lambda m, jj, ii, f: (f, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, S, Tw), lambda m, jj, ii, f: (m, f, ii, jj)),
         scratch_shapes=[pltpu.VMEM((plan.eh, plan.ew), planes.dtype),
@@ -208,15 +255,16 @@ def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary",
                                  "arbitrary")),
-        name=f"filter2d_halo_{form}_{plan.policy}",
-    )(planes, coeffs)
+        name=name,
+    )(*operands)
 
 
 def stream_vmem_working_set(strip_h: int, tile_w: int, w: int,
                             dtype_bytes: int = 4, *,
                             separable: bool = False,
                             num_filters: int = 1,
-                            acc_dtype_bytes: int = None) -> int:
+                            acc_dtype_bytes: int = None,
+                            out_dtype_bytes: int = None) -> int:
     """Bytes resident in VMEM per stream grid step (the row-buffer bound).
 
     The halo-extended scratch + the output tile + the coefficient file. A
@@ -226,18 +274,24 @@ def stream_vmem_working_set(strip_h: int, tile_w: int, w: int,
     AND line buffer, and the input tile no longer needs a second VMEM
     block — it is DMA'd from HBM directly into the scratch.)
 
-    Dtype-aware: ``dtype_bytes`` is the *storage* width (the scratch the
-    DMA fills), ``acc_dtype_bytes`` the accumulator/output width (defaults
-    to the storage width — pass 4 for the fixed-point int8/int16-in,
-    int32-out datapath, where the scratch shrinks 4×/2× but the output
-    tile and coefficient file stay wide).
+    Dtype-aware in both directions: ``dtype_bytes`` is the *storage* width
+    (the scratch the DMA fills), ``acc_dtype_bytes`` the accumulator width
+    (defaults to the storage width — pass 4 for the fixed-point
+    int8/int16-in datapath, where the scratch shrinks 4×/2× but the
+    coefficient file stays wide), and ``out_dtype_bytes`` the width of the
+    output tile (defaults to the accumulator width; pass the storage width
+    when the plan carries the requantising epilogue — the output tile then
+    shrinks 4× along with the write-side HBM traffic, freeing VMEM for
+    deeper strips).
     """
     if acc_dtype_bytes is None:
         acc_dtype_bytes = dtype_bytes
+    if out_dtype_bytes is None:
+        out_dtype_bytes = acc_dtype_bytes
     r = (w - 1) // 2
     ew = tile_w + 2 * r
     ew += (-ew) % LANE                   # lane padding, as the plan lays out
     ext_scratch = (strip_h + 2 * r) * ew * dtype_bytes
-    out_tile = strip_h * tile_w * acc_dtype_bytes
+    out_tile = strip_h * tile_w * out_dtype_bytes
     coeff = num_filters * (2 * w if separable else w * w) * acc_dtype_bytes
     return ext_scratch + out_tile + coeff

@@ -31,7 +31,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.border_spec import BorderSpec
-from repro.core.filter2d import is_fixed_point, resolve_separable
+from repro.core.filter2d import (is_fixed_point, resolve_requant,
+                                 resolve_separable)
+from repro.core.requant import RequantSpec
 from repro.kernels.filter2d import halo
 from repro.kernels.filter2d import kernel as K
 
@@ -78,13 +80,20 @@ def _unfold(y: jax.Array, tag, keep_bank: bool) -> jax.Array:
 @functools.partial(
     jax.jit,
     static_argnames=("form", "border", "regime", "strip_h", "tile_w",
-                     "interpret"))
-def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array, *,
+                     "interpret", "requant"))
+def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array,
+                            q_params: Optional[jax.Array] = None, *,
                             form: str, border: BorderSpec, regime: str,
-                            strip_h: int, tile_w: int,
-                            interpret: bool) -> jax.Array:
+                            strip_h: int, tile_w: int, interpret: bool,
+                            requant: Optional[RequantSpec] = None
+                            ) -> jax.Array:
     """planes: [M, H, W]; coeffs: [N, w, w] (or [N, 2, w] factors for
-    ``form='separable'``). Returns [M, N, Ho, Wo]."""
+    ``form='separable'``). Returns [M, N, Ho, Wo].
+
+    ``requant`` here is the *gain-free* static half of the spec (rounding
+    mode + storage dtype — what shapes the trace and the plan); the
+    actual per-filter (multiplier, shift) table is the traced ``q_params``
+    operand, so a served pipeline swaps gains without recompiling."""
     M, H, W = planes.shape
     w = coeffs.shape[-1]
     r = (w - 1) // 2
@@ -106,11 +115,13 @@ def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array, *,
     else:
         raise ValueError(regime)
 
-    # the plan carries the *storage* dtype: byte accounting and the
-    # quantized constant(c) both follow the narrow stream, not the
-    # int32 accumulator.
-    plan = halo.make_plan(H, W, w, border, S, Tw, dtype=planes.dtype)
-    y = K.filter2d_halo(planes, coeffs, plan, form=form, interpret=interpret)
+    # the plan carries the *storage* dtype AND the output epilogue: byte
+    # accounting and the quantized constant(c) follow the narrow stream,
+    # and the requant spec (when set) makes the write side narrow too.
+    plan = halo.make_plan(H, W, w, border, S, Tw, dtype=planes.dtype,
+                          requant=requant)
+    y = K.filter2d_halo(planes, coeffs, plan, q_params=q_params, form=form,
+                        interpret=interpret)
     return y[:, :, :Ho, :Wo]
 
 
@@ -132,11 +143,22 @@ def _coeff_operand(frame: jax.Array, coeffs: jax.Array, form: str,
         cdtype)[None], "separable"
 
 
+def _requant_operand(rq: Optional[RequantSpec], n: int):
+    """Split a resolved spec into its trace-shaping static half
+    (``gain_free()``) and the traced [N, 2] (multiplier, shift) table —
+    gains are runtime data like the coefficients, so swapping them hits
+    the jit cache."""
+    if rq is None:
+        return None, None
+    return rq.gain_free(), jnp.asarray(rq.params(n), jnp.int32)
+
+
 def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
                     form: str = "direct",
                     border: BorderSpec = BorderSpec("mirror"),
                     regime: str = "stream", strip_h: int = 128,
                     tile_w: int = 512, separable=False,
+                    requant: Optional[RequantSpec] = None,
                     interpret: Optional[bool] = None) -> jax.Array:
     """Pallas-kernel 2D filter. frame: [H,W] | [H,W,C] | [B,H,W,C].
 
@@ -156,15 +178,23 @@ def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
     through HBM, the halo DMAs and the VMEM scratch at their 1-2 byte
     storage width — every border policy muxes on the integer dtype, with
     ``constant(c)`` quantized to it — widen to int32 only at the MAC, and
-    return int32 bit-exact with ``core.filter2d``. The caller owns
+    return int32 bit-exact with ``core.filter2d``. Pass ``requant`` (a
+    :class:`~repro.core.requant.RequantSpec`) to fuse the output scaler
+    into the kernel: the int32 accumulator is scaled, rounded and
+    saturated back to the spec's storage dtype *before the store*, so the
+    stream is narrow in BOTH directions (an int8→int8 round trip moves
+    ≈2 HBM bytes/pixel instead of ≈5). Without it the caller owns
     requantisation.
     """
     interpret = _default_interpret() if interpret is None else interpret
+    rq = resolve_requant(frame.dtype, requant)
     planes, tag = _fold_planes(frame)
     co, form = _coeff_operand(frame, coeffs, form, separable)
-    y = _filter2d_pallas_planes(planes, co, form=form, border=border,
-                                regime=regime, strip_h=strip_h,
-                                tile_w=tile_w, interpret=interpret)
+    rq_static, q_params = _requant_operand(rq, 1)
+    y = _filter2d_pallas_planes(planes, co, q_params, form=form,
+                                border=border, regime=regime,
+                                strip_h=strip_h, tile_w=tile_w,
+                                interpret=interpret, requant=rq_static)
     return _unfold(y, tag, keep_bank=False)
 
 
@@ -173,6 +203,7 @@ def filter_bank_pallas(frame: jax.Array, bank: jax.Array, *,
                        border: BorderSpec = BorderSpec("mirror"),
                        regime: str = "stream", strip_h: int = 128,
                        tile_w: int = 512,
+                       requant: Optional[RequantSpec] = None,
                        interpret: Optional[bool] = None) -> jax.Array:
     """Apply a bank of N filters in one kernel launch: bank [N, w, w] ->
     output [..., N]. The filter dim is a kernel grid dimension — the halo
@@ -180,15 +211,20 @@ def filter_bank_pallas(frame: jax.Array, bank: jax.Array, *,
     coefficient sets (the paper's coefficient file, folded into the grid),
     under every border policy. Fixed-point frames follow the contract of
     :func:`filter2d_pallas`: narrow storage end-to-end, one int32
-    accumulator per bank filter, int32 out.
+    accumulator per bank filter, int32 out — or, with ``requant``, each
+    bank lane requantised by its own (multiplier, shift) scaler (tuples in
+    the spec, one entry per filter, riding the kernel's params operand)
+    and stored at the spec's storage width.
     """
     interpret = _default_interpret() if interpret is None else interpret
+    rq = resolve_requant(frame.dtype, requant, num_filters=bank.shape[0])
     planes, tag = _fold_planes(frame)
     bank = jnp.asarray(bank)
     if is_fixed_point(frame.dtype):
         bank = bank.astype(jnp.int32)
-    y = _filter2d_pallas_planes(planes, bank, form=form,
+    rq_static, q_params = _requant_operand(rq, bank.shape[0])
+    y = _filter2d_pallas_planes(planes, bank, q_params, form=form,
                                 border=border, regime=regime,
                                 strip_h=strip_h, tile_w=tile_w,
-                                interpret=interpret)
+                                interpret=interpret, requant=rq_static)
     return _unfold(y, tag, keep_bank=True)

@@ -1,20 +1,25 @@
 """The CI bench-regression gate's comparator, unit-tested.
 
-The acceptance case: an injected 20% pixel-rate regression (above the 15%
-budget) must fail the gate; structural byte metrics fail on ANY increase.
+The acceptance cases: an injected 20% pixel-rate regression (above the
+10% budget) must fail the gate; structural byte metrics fail on ANY
+increase — on the read side AND the write side; and the windowed baseline
+(median-of-N rate, min-of-N bytes) must survive odd/even window sizes,
+missing artifacts and single-outlier baseline runs.
 """
 import json
 
-from benchmarks.compare import compare, index_rows, main
+from benchmarks.compare import (compare, index_rows, main,
+                                windowed_baseline)
 
 
 def _payload(rows):
     return {"schema": "bench_trajectory_v1", "rows": rows}
 
 
-def _row(name, rate=1e6, bpp=8.2, read_bpp=4.2, **extra):
+def _row(name, rate=1e6, bpp=8.2, read_bpp=4.2, write_bpp=4.0, **extra):
     r = {"name": name, "us_per_call": 100.0, "pixels_per_s": rate,
-         "hbm_bytes_per_pixel": bpp, "hbm_read_bytes_per_pixel": read_bpp}
+         "hbm_bytes_per_pixel": bpp, "hbm_read_bytes_per_pixel": read_bpp,
+         "hbm_write_bytes_per_pixel": write_bpp}
     r.update(extra)
     return r
 
@@ -95,6 +100,89 @@ def test_error_rows_are_not_indexed():
     assert list(rows) == ["y"]
 
 
+def test_write_bytes_increase_fails():
+    """The requant epilogue silently dropping off the write side (int32
+    traffic reappearing) must trip the gate on its own key."""
+    base = _payload([_row("pallas_halo/direct/mirror/int8/requant",
+                          bpp=2.05, read_bpp=1.05, write_bpp=1.0)])
+    cur = _payload([_row("pallas_halo/direct/mirror/int8/requant",
+                         bpp=5.05, read_bpp=1.05, write_bpp=4.0)])
+    failures, _ = compare(base, cur)
+    msgs = "\n".join(failures)
+    assert "hbm_write_bytes_per_pixel" in msgs
+    assert "hbm_bytes_per_pixel" in msgs
+
+
+# -- windowed baseline: median-of-N rate, min-of-N bytes --------------------
+
+
+def _window(*rates, name="r", bpp=8.2):
+    """Newest-first single-row payloads with the given pixel rates."""
+    return [_payload([_row(name, rate=r, bpp=bpp)]) for r in rates]
+
+
+def test_window_median_odd_ignores_outlier():
+    """A lucky-fast newest run (the single-baseline gate's poison) does
+    not ratchet the floor: the median of [1.3e6, 1.0e6, 1.0e6] is 1.0e6,
+    so a current 0.95e6 (27% below the outlier) stays within 10%."""
+    failures, _ = compare(_window(1.3e6, 1.0e6, 1.0e6),
+                          _payload([_row("r", rate=0.95e6)]))
+    assert failures == []
+
+
+def test_window_median_even_averages_middle():
+    """Even windows average the two middle samples: median of
+    [1.2e6, 1.0e6] is 1.1e6 — 1.0e6 is a 9.1% drop (passes), 0.98e6 a
+    10.9% drop (fails)."""
+    win = _window(1.2e6, 1.0e6)
+    ok, _ = compare(win, _payload([_row("r", rate=1.0e6)]))
+    assert ok == []
+    bad, _ = compare(win, _payload([_row("r", rate=0.98e6)]))
+    assert len(bad) == 1 and "pixels_per_s" in bad[0]
+
+
+def test_window_cap_limits_samples():
+    """Only the newest ``window`` records enter the median."""
+    win = _window(1.0e6, 1.1e6, 1.2e6, 9e6, 9e6)
+    cur = _payload([_row("r", rate=1.0e6)])
+    ok, _ = compare(win, cur, window=3)     # median 1.1e6 -> 9.1% drop
+    assert ok == []
+    bad, _ = compare(win, cur, window=5)    # median 1.2e6 -> 16.7% drop
+    assert len(bad) == 1
+
+
+def test_window_bytes_gate_uses_minimum():
+    """Byte metrics are analytic: the best value in the window is the
+    locked-in capability, so a widening fails even when the median of the
+    window would still cover it."""
+    win = [_payload([_row("r", bpp=5.05)]),       # newest: regressed once
+           _payload([_row("r", bpp=2.05)]),       # the epilogue's win
+           _payload([_row("r", bpp=5.05)])]
+    bad, _ = compare(win, _payload([_row("r", bpp=5.05)]))
+    assert any("hbm_bytes_per_pixel" in f for f in bad)
+    ok, _ = compare(win, _payload([_row("r", bpp=2.05)]))
+    assert ok == []
+
+
+def test_window_membership_follows_newest():
+    """A row renamed/retired before the newest baseline must not haunt
+    the gate for the rest of the window."""
+    old = _payload([_row("r"), _row("retired_row")])
+    new = _payload([_row("r")])
+    failures, _ = compare([new, old, old], _payload([_row("r")]))
+    assert failures == []
+
+
+def test_windowed_baseline_merges_metrics():
+    win = _window(1.0e6, 3.0e6, 2.0e6)
+    merged = windowed_baseline(win)
+    assert merged["r"]["pixels_per_s"] == 2.0e6
+    # rows missing a metric in some records: median over those that have it
+    win[1]["rows"][0].pop("pixels_per_s")
+    merged = windowed_baseline(win)
+    assert merged["r"]["pixels_per_s"] == 1.5e6
+
+
 def test_cli_missing_baseline_seeds(tmp_path, capsys):
     cur = tmp_path / "BENCH_smoke.json"
     cur.write_text(json.dumps(BASE))
@@ -102,6 +190,23 @@ def test_cli_missing_baseline_seeds(tmp_path, capsys):
                "--current", str(cur)])
     assert rc == 0
     assert "seeding" in capsys.readouterr().out
+
+
+def test_cli_missing_window_entries_are_skipped(tmp_path, capsys):
+    """The artifact window is ragged in practice (retention, young repos):
+    absent files shrink the window instead of erroring; a window of one
+    degrades to the old single-baseline gate."""
+    base = tmp_path / "b1.json"
+    base.write_text(json.dumps(BASE))
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(BASE))
+    rc = main(["--baseline", str(base),
+               "--baseline", str(tmp_path / "b2.json"),   # absent
+               "--baseline", str(tmp_path / "b3.json"),   # absent
+               "--current", str(cur)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "skipped" in out and "1-record window" in out
 
 
 def test_cli_end_to_end_regression(tmp_path):

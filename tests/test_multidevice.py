@@ -49,6 +49,40 @@ def test_sharded_filter_halo_exchange():
     """)
 
 
+def test_sharded_fixed_point_narrow_ring_and_requant():
+    """Fixed-point shards exchange halos at *storage* width (the compiled
+    HLO's collective-permutes run on s8, not s32) and the requantising
+    epilogue applies per shard — bit-exact with the single-device path."""
+    _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.filter2d import filter2d
+    from repro.core.distributed import filter2d_sharded
+    from repro.core.borders import BorderSpec
+    from repro.core.requant import RequantSpec
+    mesh = jax.make_mesh((4,), ("data",))
+    rng = np.random.default_rng(3)
+    x = rng.integers(-20, 20, (2, 64, 40, 3)).astype(np.int8)
+    k = rng.integers(-4, 5, (3, 3)).astype(np.int32)
+    rq = RequantSpec(multiplier=3, shift=6, rounding="nearest", dtype="int8")
+    for pol in ("mirror", "wrap", "constant"):
+        spec = BorderSpec(pol, 2.0)
+        ref = filter2d(jnp.asarray(x), jnp.asarray(k), border=spec,
+                       requant=rq)
+        y = filter2d_sharded(jnp.asarray(x), jnp.asarray(k), mesh,
+                             border=spec, requant=rq)
+        assert y.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+    # wire dtype: the ring must carry storage-width halo rows
+    fn = jax.jit(lambda a, b: filter2d_sharded(a, b, mesh))
+    txt = fn.lower(jax.ShapeDtypeStruct((1, 64, 128, 1), jnp.int8),
+                   jax.ShapeDtypeStruct((5, 5), jnp.int32)
+                   ).compile().as_text()
+    cp = [l for l in txt.splitlines() if "collective-permute(" in l]
+    assert cp and all("s8" in l for l in cp), cp
+    print("OK")
+    """)
+
+
 def test_compressed_dp_step_two_pods():
     """int8-EF hierarchical DP step runs on a (pod=2, data=2) mesh and the
     loss matches the uncompressed pjit step to quantisation tolerance."""

@@ -104,3 +104,35 @@ def test_separable_macs_accounting():
     for w in (3, 5, 7):
         assert macs_per_pixel(w, separable=True) == 2 * w
         assert macs_per_pixel(w, "direct") == w * w
+
+
+def test_auto_with_traced_coeffs_warns_once(rng):
+    """separable='auto' under jit cannot run SVD detection (traced
+    coefficients) and silently eats the w² cost — a served pipeline must
+    get a one-time pointer at explicit separable=(u, v)."""
+    import warnings
+
+    import jax
+
+    from repro.core import filter2d as f2d
+
+    x = rng.standard_normal((16, 16)).astype(np.float32)
+    k = filters.gaussian(3)
+    fn = jax.jit(lambda a, b: filter2d(a, b, separable="auto"))
+    f2d._SEP_AUTO_TRACED_WARNED = False
+    try:
+        with pytest.warns(UserWarning, match=r"separable=\(u, v\)"):
+            fn(jnp.asarray(x), jnp.asarray(k))
+        # one-time: a second traced resolution stays silent
+        fn2 = jax.jit(lambda a, b: filter2d(a, b, form="tree",
+                                            separable="auto"))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            fn2(jnp.asarray(x), jnp.asarray(k))
+        # concrete-coefficient auto never warns, even from a fresh flag
+        f2d._SEP_AUTO_TRACED_WARNED = False
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            filter2d(jnp.asarray(x), jnp.asarray(k), separable="auto")
+    finally:
+        f2d._SEP_AUTO_TRACED_WARNED = True   # keep the suite quiet

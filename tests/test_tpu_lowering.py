@@ -23,6 +23,7 @@ import pytest
 from jax import export as jax_export
 
 from repro.core.border_spec import BorderSpec
+from repro.core.requant import ROUNDING_MODES, RequantSpec
 from repro.kernels.dwconv1d import dwconv1d_pallas
 from repro.kernels.filter2d import filter2d_pallas, filter_bank_pallas
 from repro.kernels.swattn import swattn_pallas
@@ -66,6 +67,44 @@ def test_filter2d_fixed_point_lowers(dtype, policy):
                           regime="stream", strip_h=64, tile_w=128,
                           interpret=False),
         _sds((128, 256), dtype), _sds((5, 5), jnp.int32))
+
+
+@pytest.mark.parametrize("rounding", ROUNDING_MODES)
+@pytest.mark.parametrize("dtype,out", [(jnp.int8, "int8"),
+                                       (jnp.uint8, "uint8"),
+                                       (jnp.int16, "int16")])
+def test_filter2d_requant_lowers(dtype, out, rounding):
+    """The fused requantising epilogue: int32 MAC, scale→round→saturate,
+    *storage-dtype* output BlockSpec — the shift/mask ops and the narrow
+    store must all make it through Mosaic."""
+    rq = RequantSpec(multiplier=3, shift=7, rounding=rounding, dtype=out)
+    _assert_lowers(
+        functools.partial(filter2d_pallas, border=BorderSpec("mirror"),
+                          regime="stream", strip_h=64, tile_w=128,
+                          requant=rq, interpret=False),
+        _sds((128, 256), dtype), _sds((5, 5), jnp.int32))
+
+
+def test_filter_bank_requant_per_filter_lowers():
+    """Per-filter (multiplier, shift) scalers ride the kernel's params
+    operand; every bank lane stores at storage width."""
+    rq = RequantSpec(multiplier=(1, -2, 3), shift=(4, 5, 6),
+                     rounding="nearest_even", dtype="int8")
+    _assert_lowers(
+        functools.partial(filter_bank_pallas, border=BorderSpec("wrap"),
+                          regime="stream", strip_h=64, tile_w=128,
+                          requant=rq, interpret=False),
+        _sds((128, 256), jnp.int8), _sds((3, 5, 5), jnp.int32))
+
+
+def test_filter2d_separable_requant_lowers():
+    rq = RequantSpec(multiplier=1, shift=4, rounding="nearest", dtype="int8")
+    u = np.array([1, 2, 1], np.int32)
+    _assert_lowers(
+        functools.partial(filter2d_pallas, border=BorderSpec("duplicate"),
+                          separable=(u, u), regime="stream", strip_h=64,
+                          tile_w=128, requant=rq, interpret=False),
+        _sds((128, 256), jnp.int8), _sds((3, 3), jnp.int32))
 
 
 def test_filter2d_separable_lowers():
