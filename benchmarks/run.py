@@ -66,10 +66,11 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_border_overhead, bench_filter_forms,
                             bench_hls_comparison, bench_lm_roofline,
-                            bench_throughput)
+                            bench_pipeline, bench_throughput)
     modules = [
         ("filter_forms", bench_filter_forms),
         ("border_overhead", bench_border_overhead),
+        ("pipeline", bench_pipeline),
         ("hls_comparison", bench_hls_comparison),
         ("throughput", bench_throughput),
         ("lm_roofline", bench_lm_roofline),
@@ -77,7 +78,7 @@ def main(argv=None) -> None:
     if args.smoke:
         modules = [m for m in modules
                    if m[0] in ("filter_forms", "border_overhead",
-                               "throughput")]
+                               "pipeline", "throughput")]
     print("name,us_per_call,derived")
     failures = 0
     records = []

@@ -1,10 +1,16 @@
-"""End-to-end streaming video pipeline — the paper's deployment scenario.
+"""End-to-end streaming video pipeline — the paper's deployment scenario,
+on the plan-and-execute API.
 
-A smart-vision stack: a video stream is filtered by a runtime-coefficient
-bank whose slots are rewritten between frames by the "higher layers"
-(here: a toy scene-change heuristic), exactly the adaptivity argument the
-paper makes against fixed-coefficient HLS filters. Also demonstrates the
-distributed row-sharded path when multiple devices are available.
+A smart-vision stack: the filter's *structure* (window, border policy,
+bank size) is declared once as a `Filter2D` spec and compiled into a
+`CompiledFilter`; the video stream then runs through the compiled
+pipeline while the "higher layers" (here: a toy scene-change heuristic)
+rewrite the coefficient-file slots **between frames** — coefficients are
+traced operands, so every swap reuses the same executable (the script
+prints the recompile counter to prove it). This is exactly the
+adaptivity argument the paper makes against fixed-coefficient HLS
+filters. Also demonstrates the distributed row-sharded executor when
+multiple devices are available.
 
   PYTHONPATH=src python examples/video_pipeline.py [--frames 24]
 """
@@ -15,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BorderSpec, default_bank, filter_bank, filter2d
+from repro import BorderSpec, Filter2D
+from repro.core import decompose_separable, default_bank
 from repro.data import video_stream
 
 
@@ -24,49 +31,75 @@ def main():
     ap.add_argument("--frames", type=int, default=12)
     ap.add_argument("--height", type=int, default=480)
     ap.add_argument("--width", type=int, default=640)
-    ap.add_argument("--pallas", action="store_true",
-                    help="run the bank through the column-tiled streaming "
-                         "kernel (8K-ready; interpret mode off-TPU)")
+    ap.add_argument("--execution", default="core",
+                    choices=("auto", "core", "xla", "pallas", "streaming"),
+                    help="executor for both pipelines ('pallas' runs the "
+                         "column-tiled streaming kernel; interpret mode "
+                         "off-TPU)")
     args = ap.parse_args()
 
     cf = default_bank(w_max=7, num_slots=8)
     stream = video_stream(args.height, args.width, 1)
+    shape = (args.height, args.width)
+
+    # plan once: one bank pipeline for the feature pass, one single-filter
+    # pipeline for the output pass — structure compiled, coefficients data
+    border = BorderSpec("mirror")
+    # banks run on the core/pallas executors (xla/streaming are
+    # single-filter paths)
+    bank_exec = (args.execution
+                 if args.execution in ("auto", "core", "pallas") else "core")
+    bank_pipe = Filter2D(window=7, border=border, num_filters=4).compile(
+        shape, bank_exec)
+    out_pipe = Filter2D(window=7, border=border).compile(
+        shape, args.execution)
+    # rank-1 slots (gaussian/box) run the 2w-MAC separable pipeline —
+    # (u, v) factor operands swap at line rate like coefficients do
+    sep_pipe = Filter2D(window=7, border=border, separable=True).compile(
+        shape, bank_exec)
+    print(f"[video] compiled: bank={bank_pipe!r}")
+    print(f"[video] compiled: out={out_pipe!r}")
+    print(f"[video] compiled: sep={sep_pipe!r}")
+
     active_slot = 0
     t0 = time.perf_counter()
-    px = 0
+    px = sep_frames = 0
     prev_mean = None
-    if args.pallas:
-        from repro.kernels.filter2d import filter_bank_pallas
-        bank_fn = lambda f, b: filter_bank_pallas(f, b)
-    else:
-        bank_fn = filter_bank
     for i in range(args.frames):
         frame = jnp.asarray(next(stream)[..., 0])
-        # low-level: one pass applies the whole bank (coefficient file as a
-        # grid dim on the Pallas path, one MXU contraction on the jnp path)
-        feats = bank_fn(frame, cf.as_bank()[:4])
+        # one pass applies the whole bank (the coefficient file)
+        feats = bank_pipe(frame, cf.as_bank()[:4])
         # "higher layer": scene statistics choose the next frame's filter
         m = float(feats[..., 0].mean())
         if prev_mean is not None and abs(m - prev_mean) > 0.01:
             active_slot = (active_slot + 1) % 4     # adapt: swap coefficients
         prev_mean = m
-        # rank-1 slots (gaussian/box) take the separable 2w-MAC fast path
-        out = filter2d(frame, cf.read(active_slot),
-                       border=BorderSpec("mirror"), separable="auto")
+        k = cf.read(active_slot)
+        uv = decompose_separable(np.asarray(k))
+        if uv is not None:      # rank-1 slot: 2w MACs/pixel instead of w²
+            out = sep_pipe(frame, uv)
+            sep_frames += 1
+        else:
+            out = out_pipe(frame, k)
         jax.block_until_ready(out)
         px += frame.size
     dt = time.perf_counter() - t0
     print(f"[video] {args.frames} frames {args.height}x{args.width}, "
           f"{px / dt / 1e6:.1f} Mpix/s on CPU "
-          f"(filter bank of 4 + adaptive slot {active_slot})")
+          f"(filter bank of 4 + adaptive slot {active_slot}; "
+          f"{sep_frames} frames took the separable fast path)")
+    print(f"[video] recompiles across all slot/factor swaps: "
+          f"bank={bank_pipe.cache_size() - 1}, "
+          f"out={max(out_pipe.cache_size() - 1, 0)}, "
+          f"sep={max(sep_pipe.cache_size() - 1, 0)}  <- swapping is free")
 
     n_dev = jax.device_count()
     if n_dev > 1:
-        from repro.core.distributed import filter2d_sharded
         mesh = jax.make_mesh((n_dev,), ("data",))
-        frame4 = jnp.asarray(next(stream).transpose(2, 0, 1)[None])
-        frame4 = jnp.broadcast_to(frame4, (1, args.height, args.width, 1))
-        y = filter2d_sharded(frame4, cf.read(0), mesh)
+        frame4 = jnp.asarray(next(stream))[None]    # [1, H, W, C]
+        sharded = Filter2D(window=7, border=border).compile(
+            frame4, "sharded", mesh=mesh)
+        y = sharded(frame4, cf.read(0))
         print(f"[video] row-sharded over {n_dev} devices: {y.shape}")
     else:
         print("[video] single device: run with "

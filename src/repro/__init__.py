@@ -1,2 +1,19 @@
 """repro: high-throughput 2D spatial filters on TPU (Al-Dujaili & Fahmy,
-2017) + the multi-pod JAX training/serving framework built around them."""
+2017) + the multi-pod JAX training/serving framework built around them.
+
+The filtering front door re-exports here: declare the filter's static
+structure with :class:`Filter2D` (+ :class:`BorderSpec` /
+:class:`RequantSpec`), ``compile`` it for one frame geometry, and stream
+frames with runtime-swappable coefficients and gains through the returned
+:class:`CompiledFilter`. ``__all__`` is pinned by tests/test_public_api.py.
+"""
+from repro.core.border_spec import BorderSpec
+from repro.core.pipeline import CompiledFilter, Filter2D
+from repro.core.requant import RequantSpec
+
+__all__ = [
+    "BorderSpec",
+    "CompiledFilter",
+    "Filter2D",
+    "RequantSpec",
+]

@@ -5,14 +5,54 @@ Submodules:
   borders      — border policies as lean index remaps (paper §III)
   filters      — runtime coefficient file + preset bank (paper §I/§II)
   filter2d     — direct/transposed/tree/compress forms (paper §II)
+  requant      — the fused output-scaler spec + numpy reference (paper §IV)
   streaming    — row-strip streaming executor with carried row buffer
   distributed  — shard_map halo exchange (the row buffer, distributed)
+  pipeline     — the plan-and-execute front door: Filter2D → CompiledFilter
+
+``Filter2D(...).compile(frame_spec)`` is the one front door over every
+executor; the per-executor entry points remain as thin wrappers. The
+export list below is pinned by a snapshot test (tests/test_public_api.py)
+so the public surface cannot fork silently.
 """
 from repro.core.border_spec import (ALIASES, BorderSpec, POLICIES,
                                     SAME_SIZE_POLICIES, np_pad_mode,
-                                    out_shape)
+                                    out_shape, quantize_constant)
 from repro.core.filter2d import (FORMS, filter2d, filter2d_xla, filter_bank,
                                  macs_per_pixel, reduction_depth)
 from repro.core.filters import (CoefficientFile, decompose_separable,
                                 default_bank, preset)
+from repro.core.requant import RequantSpec, requantize_ref
 from repro.core.streaming import filter2d_streaming, strip_height_for_vmem
+from repro.core.distributed import filter2d_sharded
+from repro.core.pipeline import (DEFAULT_VMEM_BUDGET, EXECUTIONS,
+                                 CompiledFilter, Filter2D)
+
+__all__ = [
+    "ALIASES",
+    "BorderSpec",
+    "CoefficientFile",
+    "CompiledFilter",
+    "DEFAULT_VMEM_BUDGET",
+    "EXECUTIONS",
+    "FORMS",
+    "Filter2D",
+    "POLICIES",
+    "RequantSpec",
+    "SAME_SIZE_POLICIES",
+    "decompose_separable",
+    "default_bank",
+    "filter2d",
+    "filter2d_sharded",
+    "filter2d_streaming",
+    "filter2d_xla",
+    "filter_bank",
+    "macs_per_pixel",
+    "np_pad_mode",
+    "out_shape",
+    "preset",
+    "quantize_constant",
+    "reduction_depth",
+    "requantize_ref",
+    "strip_height_for_vmem",
+]

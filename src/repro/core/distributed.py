@@ -25,16 +25,18 @@ from jax.experimental.shard_map import shard_map
 from repro.core.border_spec import quantize_constant
 from repro.core.borders import BorderSpec, gather_rows
 from repro.core.filter2d import (_FORM_FNS, _as_nhwc, _un_nhwc,
-                                 apply_requant_spec, is_fixed_point,
+                                 apply_requant_params, is_fixed_point,
                                  resolve_requant)
 from repro.core.requant import RequantSpec
 
 
-def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
-                     axis: str = "data", form: str = "direct",
-                     border_policy: str = "mirror",
-                     border: Optional[BorderSpec] = None,
-                     requant: Optional[RequantSpec] = None) -> jax.Array:
+def _filter2d_sharded_impl(frame: jax.Array, coeffs: jax.Array, mesh: Mesh,
+                           q_params: Optional[jax.Array] = None,
+                           *, axis: str = "data", form: str = "direct",
+                           border_policy: str = "mirror",
+                           border: Optional[BorderSpec] = None,
+                           requant: Optional[RequantSpec] = None
+                           ) -> jax.Array:
     """Row-shard ``frame`` over ``mesh[axis]`` and filter with halo exchange.
 
     frame: [B,H,W,C] (H divisible by the axis size). Returns same shape.
@@ -56,6 +58,12 @@ def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
     if spec.policy == "neglect":
         raise ValueError("sharded path does not support 'neglect'")
     rq = resolve_requant(frame.dtype, requant)
+    # the (multiplier, shift) gains ride as a traced [1, 2] operand
+    # (replicated across the mesh), defaulting to the spec's own: the
+    # pipeline swaps gains without recompiling while each shard still
+    # requantises its own tile (storage-width gather, the PR-4 contract)
+    if rq is not None and q_params is None:
+        q_params = jnp.asarray(rq.params(1), jnp.int32)
     # fixed-point: quantize constant(c) against the storage dtype (shared
     # rule) and keep the frame NARROW — only the coefficients widen here.
     # The storage-width halo rows cross the ring; each shard widens on the
@@ -72,13 +80,18 @@ def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
     n_shards = mesh.shape[axis]
     assert H % n_shards == 0 and H // n_shards >= r, (H, n_shards, r)
     if n_shards == 1:
-        from repro.core.filter2d import filter2d
-        return filter2d(frame, coeffs, form=form, border=spec, requant=rq)
+        from repro.core.filter2d import _filter2d_impl
+        qc = jnp.asarray(quantize_constant(spec.constant, frame.dtype))
+        y = _filter2d_impl(frame, coeffs, form=form,
+                           border_policy=spec.policy, border_constant=qc)
+        return y if rq is None else apply_requant_params(y, q_params, rq)
 
     in_specs = (P(None, axis, None, None), P())
+    if rq is not None:
+        in_specs = in_specs + (P(),)      # gains replicated to every shard
     out_specs = P(None, axis, None, None)
 
-    def local(xs: jax.Array, k: jax.Array) -> jax.Array:
+    def local(xs: jax.Array, k: jax.Array, q: jax.Array = None) -> jax.Array:
         Hs = xs.shape[1]
         idx = jax.lax.axis_index(axis)
         # halo exchange at storage width: send my top r rows
@@ -109,10 +122,34 @@ def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
         if rq is not None:
             # fused epilogue per shard: the tiles the mesh gathers (or a
             # downstream ring carries) are requantised, storage-width
-            y = apply_requant_spec(y, rq)
+            y = apply_requant_params(y, q, rq)
         return y
 
     fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)
-    y = fn(x, coeffs)
+    y = fn(x, coeffs, q_params) if rq is not None else fn(x, coeffs)
     return _un_nhwc(y, add_b, add_c)
+
+
+def filter2d_sharded(frame: jax.Array, coeffs: jax.Array, mesh: Mesh, *,
+                     axis: str = "data", form: str = "direct",
+                     border_policy: str = "mirror",
+                     border: Optional[BorderSpec] = None,
+                     requant: Optional[RequantSpec] = None) -> jax.Array:
+    """Row-shard ``frame`` over ``mesh[axis]`` and filter with halo
+    exchange — see :func:`_filter2d_sharded_impl` for the full contract
+    (storage-width ppermute ring, per-shard requantising epilogue, wrap
+    served by the ring itself).
+
+    Thin wrapper over ``core.pipeline.Filter2D`` (``execution='sharded'``)
+    — prefer the compiled front door for served pipelines.
+    """
+    from repro.core.pipeline import Filter2D
+    spec_b = border if border is not None else BorderSpec(border_policy)
+    rq = resolve_requant(frame.dtype, requant)
+    spec = Filter2D(window=int(jnp.shape(coeffs)[-1]), form=form,
+                    border=spec_b,
+                    dtype=jnp.dtype(frame.dtype).name,
+                    requant=rq.gain_free() if rq is not None else None)
+    cf = spec.compile(frame, "sharded", mesh=mesh, axis=axis)
+    return cf(frame, coeffs, gains=rq)

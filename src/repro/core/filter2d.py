@@ -125,22 +125,18 @@ def apply_requant(acc: jax.Array, multiplier, shift, *, rounding: str,
     return jnp.clip(q, info.min, info.max).astype(out_dtype)
 
 
-def apply_requant_spec(y: jax.Array, requant: RequantSpec) -> jax.Array:
-    """The epilogue driven by a spec's own (static) gains — the one call
-    every jnp executor (core impls, streaming strips, distributed shards)
-    makes, so a future spec field is threaded through exactly one place."""
-    return apply_requant(y, requant.multiplier, requant.shift,
+def apply_requant_params(y: jax.Array, q_params: jax.Array,
+                         requant: RequantSpec) -> jax.Array:
+    """The traced-gains epilogue: scale/round/saturate ``y`` by the
+    ``[1, 2]`` (multiplier, shift) operand under ``requant``'s static half
+    (rounding mode + storage dtype).
+
+    THE one call every single-filter jnp executor makes (the pipeline's
+    core/xla epilogue, each streaming strip, each distributed shard), so
+    a future spec field is threaded through exactly one place; banks
+    index their ``[N, 2]`` table per lane instead."""
+    return apply_requant(y, q_params[0, 0], q_params[0, 1],
                          rounding=requant.rounding,
-                         out_dtype=requant.np_dtype)
-
-
-def _apply_requant_bank(y: jax.Array, requant: RequantSpec,
-                        num_filters: int) -> jax.Array:
-    """Per-filter epilogue over a bank output with the filter dim LAST."""
-    params = requant.params(num_filters)
-    m = jnp.asarray([p[0] for p in params], jnp.int32)
-    s = jnp.asarray([p[1] for p in params], jnp.int32)
-    return apply_requant(y, m, s, rounding=requant.rounding,
                          out_dtype=requant.np_dtype)
 
 
@@ -260,11 +256,10 @@ def _extend_policy(frame: jax.Array, r: int, border_policy: str,
     return extend(frame, r, BorderSpec(border_policy), axes=(1, 2))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("form", "border_policy", "requant"))
+@functools.partial(jax.jit, static_argnames=("form", "border_policy"))
 def _filter2d_impl(frame: jax.Array, coeffs: jax.Array, *, form: str,
-                   border_policy: str, border_constant: jax.Array,
-                   requant: Optional[RequantSpec] = None) -> jax.Array:
+                   border_policy: str, border_constant: jax.Array
+                   ) -> jax.Array:
     # fixed-point path (paper: B=8 pixels, DSP48 accumulates at 48 bits):
     # int8/uint8 frames multiply-accumulate in int32 and return int32 —
     # the caller owns the requantisation, as the FPGA datapath does. The
@@ -282,15 +277,13 @@ def _filter2d_impl(frame: jax.Array, coeffs: jax.Array, *, form: str,
     xp = _extend_policy(frame, r, border_policy, border_constant)
     Ho, Wo = out_shape(H, W, w, spec)
     y = _FORM_FNS[form](xp, coeffs, Ho, Wo)
-    if requant is not None:
-        y = apply_requant_spec(y, requant)
     return _un_nhwc(y, add_b, add_c)
 
 
-@functools.partial(jax.jit, static_argnames=("border_policy", "requant"))
+@functools.partial(jax.jit, static_argnames=("border_policy",))
 def _filter2d_sep_impl(frame: jax.Array, u: jax.Array, v: jax.Array, *,
-                       border_policy: str, border_constant: jax.Array,
-                       requant: Optional[RequantSpec] = None) -> jax.Array:
+                       border_policy: str, border_constant: jax.Array
+                       ) -> jax.Array:
     """Separable fast path: a w-tap column pass then a w-tap row pass
     (2w MACs/pixel instead of w²). u filters rows (vertical), v columns.
     Fixed-point frames (explicit exact integer factors only — see
@@ -316,8 +309,6 @@ def _filter2d_sep_impl(frame: jax.Array, u: jax.Array, v: jax.Array, *,
     for i in range(w):
         t = jax.lax.dynamic_slice_in_dim(h, i, Ho, axis=1) * u[i]
         y = t if y is None else y + t
-    if requant is not None:
-        y = apply_requant_spec(y, requant)
     return _un_nhwc(y, add_b, add_c)
 
 
@@ -437,22 +428,59 @@ def filter2d(frame: jax.Array, coeffs: jax.Array, *, form: str = "direct",
     into the spec's storage dtype, so pixels *leave* at storage width too
     (the paper's B-bit output bus). ``None`` keeps the int32 output and
     the caller requantises.
+
+    Thin wrapper over the plan-and-execute front door: prefer
+    ``core.pipeline.Filter2D(...).compile(frame)`` for served pipelines —
+    it caches the compiled executable and swaps coefficients, separable
+    factors and requant gains without retracing.
     """
+    from repro.core.pipeline import Filter2D
     if form not in FORMS:
         raise ValueError(f"unknown form {form!r}; choose from {FORMS}")
     rq = resolve_requant(frame.dtype, requant)
-    # the constant is quantized against the *storage* dtype before any
-    # widening — one rule shared with the Pallas halo plan and the
-    # streaming/distributed executors.
-    qc = jnp.asarray(quantize_constant(border.constant, frame.dtype))
     uv = resolve_separable(frame.dtype, coeffs, separable)
-    if uv is not None:
-        return _filter2d_sep_impl(
-            frame, jnp.asarray(uv[0]), jnp.asarray(uv[1]),
-            border_policy=border.policy, border_constant=qc, requant=rq)
-    return _filter2d_impl(frame, coeffs, form=form,
-                          border_policy=border.policy,
-                          border_constant=qc, requant=rq)
+    window = (int(jnp.shape(uv[0])[0]) if uv is not None
+              else int(jnp.shape(coeffs)[-1]))
+    spec = Filter2D(window=window, form=form, border=border,
+                    separable=uv is not None,
+                    dtype=jnp.dtype(frame.dtype).name,
+                    requant=rq.gain_free() if rq is not None else None)
+    cf = spec.compile(frame, "core")
+    return cf(frame, uv if uv is not None else coeffs, gains=rq)
+
+
+@functools.partial(jax.jit, static_argnames=("form", "border"))
+def _filter_bank_impl(frame: jax.Array, bank: jax.Array, *, form: str,
+                      border: BorderSpec) -> jax.Array:
+    """The bank executable: one extension + one MXU contraction for all N
+    filters, wide accumulator out (int32 for fixed-point frames). The
+    requantising epilogue is the caller's (the pipeline applies it with
+    *traced* gains so gain swaps hit the jit cache)."""
+    qc = quantize_constant(border.constant, frame.dtype)
+    if is_fixed_point(frame.dtype):
+        frame = frame.astype(jnp.int32)
+        bank = bank.astype(jnp.int32)
+    frame_n, add_b, add_c = _as_nhwc(frame)
+    B, H, W, C = frame_n.shape
+    w = bank.shape[-1]
+    r = (w - 1) // 2
+    if border.policy == "neglect":
+        xp = frame_n
+    else:
+        # one extension serves the whole bank (constant included): the
+        # input is read ONCE for all N filters, matching the Pallas path
+        xp = _extend_policy(frame_n, r, border.policy,
+                            jnp.asarray(qc, frame_n.dtype))
+    Ho, Wo = out_shape(H, W, w, border)
+    planes = jnp.stack(
+        [_shifted(xp, i, j, Ho, Wo) for i in range(w) for j in range(w)],
+        axis=-1)  # [B,Ho,Wo,C,w2]
+    y = jnp.einsum("bhwck,kn->bhwcn", planes,
+                   bank.reshape(bank.shape[0], -1).T.astype(xp.dtype))
+    y = _un_nhwc(y, add_b, False)
+    if add_c:
+        y = y[..., 0, :]
+    return y
 
 
 def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
@@ -467,36 +495,19 @@ def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
     multiply-accumulate in int32, int32 out — unless ``requant`` gives the
     bank its per-filter output scalers (multiplier/shift tuples, one entry
     per filter), in which case each bank lane leaves at storage width.
+
+    Thin wrapper over ``core.pipeline.Filter2D`` (``num_filters=N``) —
+    prefer the compiled front door for served pipelines.
     """
-    rq = resolve_requant(frame.dtype, requant, num_filters=bank.shape[0])
-    qc = quantize_constant(border.constant, frame.dtype)
-    if is_fixed_point(frame.dtype):
-        frame = frame.astype(jnp.int32)
-        bank = bank.astype(jnp.int32)
-    frame_n, add_b, add_c = _as_nhwc(frame)
-    B, H, W, C = frame_n.shape
-    w = bank.shape[-1]
-    r = (w - 1) // 2
-    spec = border
-    if border.policy == "neglect":
-        xp = frame_n
-    else:
-        # one extension serves the whole bank (constant included): the
-        # input is read ONCE for all N filters, matching the Pallas path
-        xp = _extend_policy(frame_n, r, border.policy,
-                            jnp.asarray(qc, frame_n.dtype))
-    Ho, Wo = out_shape(H, W, w, spec)
-    planes = jnp.stack(
-        [_shifted(xp, i, j, Ho, Wo) for i in range(w) for j in range(w)],
-        axis=-1)  # [B,Ho,Wo,C,w2]
-    y = jnp.einsum("bhwck,kn->bhwcn", planes,
-                   bank.reshape(bank.shape[0], -1).T.astype(xp.dtype))
-    if rq is not None:
-        y = _apply_requant_bank(y, rq, bank.shape[0])
-    y = _un_nhwc(y, add_b, False)
-    if add_c:
-        y = y[..., 0, :]
-    return y
+    from repro.core.pipeline import Filter2D
+    n = int(jnp.shape(bank)[0])
+    rq = resolve_requant(frame.dtype, requant, num_filters=n)
+    spec = Filter2D(window=int(jnp.shape(bank)[-1]), form=form, border=border,
+                    num_filters=n,
+                    dtype=jnp.dtype(frame.dtype).name,
+                    requant=rq.gain_free() if rq is not None else None)
+    cf = spec.compile(frame, "core")
+    return cf(frame, bank, gains=rq)
 
 
 # ---------------------------------------------------------------------------
@@ -504,18 +515,25 @@ def filter_bank(frame: jax.Array, bank: jax.Array, *, form: str = "direct",
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("border_policy",))
-def filter2d_xla(frame: jax.Array, coeffs: jax.Array,
-                 border_policy: str = "mirror") -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("border",))
+def _filter2d_xla_impl(frame: jax.Array, coeffs: jax.Array, *,
+                       border: BorderSpec) -> jax.Array:
     """`lax.conv_general_dilated` — let the compiler infer the structure,
-    as Vivado HLS does in the paper's Table X comparison."""
+    as Vivado HLS does in the paper's Table X comparison. Fixed-point
+    frames follow the shared contract: the ``constant(c)`` border value is
+    quantized against the *storage* dtype before widening and the
+    convolution accumulates in int32; the requantising epilogue is the
+    pipeline's (applied with traced gains after this impl)."""
+    qc = quantize_constant(border.constant, frame.dtype)
+    if is_fixed_point(frame.dtype):
+        frame = frame.astype(jnp.int32)
+        coeffs = coeffs.astype(jnp.int32)
     frame_n, add_b, add_c = _as_nhwc(frame)
     B, H, W, C = frame_n.shape
     w = coeffs.shape[-1]
     r = (w - 1) // 2
-    spec = BorderSpec(border_policy)
-    xp = frame_n if border_policy == "neglect" else extend(
-        frame_n, r, spec, axes=(1, 2))
+    xp = frame_n if border.policy == "neglect" else _extend_policy(
+        frame_n, r, border.policy, jnp.asarray(qc, frame_n.dtype))
     # depthwise: apply same 2D kernel to each channel
     rhs = jnp.broadcast_to(coeffs.astype(xp.dtype)[:, :, None, None],
                            (w, w, 1, C))
@@ -524,6 +542,30 @@ def filter2d_xla(frame: jax.Array, coeffs: jax.Array,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=C)
     return _un_nhwc(y, add_b, add_c)
+
+
+def filter2d_xla(frame: jax.Array, coeffs: jax.Array,
+                 border_policy: str = "mirror", *,
+                 border: Optional[BorderSpec] = None,
+                 requant: Optional[RequantSpec] = None) -> jax.Array:
+    """The compiler-inferred baseline executor (paper Table X's Vivado HLS
+    analogue). Pass a full ``BorderSpec`` via ``border`` (wins over
+    ``border_policy``) for non-zero constants; ``requant`` applies the
+    same fused epilogue contract as :func:`filter2d` — fixed-point frames
+    accumulate in int32 through the convolution and leave at the spec's
+    storage width.
+
+    Thin wrapper over ``core.pipeline.Filter2D`` (``execution='xla'``) —
+    prefer the compiled front door for served pipelines.
+    """
+    from repro.core.pipeline import Filter2D
+    spec_b = border if border is not None else BorderSpec(border_policy)
+    rq = resolve_requant(frame.dtype, requant)
+    spec = Filter2D(window=int(jnp.shape(coeffs)[-1]), border=spec_b,
+                    dtype=jnp.dtype(frame.dtype).name,
+                    requant=rq.gain_free() if rq is not None else None)
+    cf = spec.compile(frame, "xla")
+    return cf(frame, coeffs, gains=rq)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,539 @@
+"""The plan-and-execute front door: ``Filter2D`` spec → ``CompiledFilter``.
+
+The paper's thesis is that a 2D filter is a *static structure* — window,
+form, border policy, wordlengths — that is planned once and then streamed
+at line rate with runtime-swappable coefficients (§I: one bitstream serves
+every filter). RIPL makes the same split declaratively (spec compiled to a
+streaming pipeline); Campos et al.'s generator parameterises the
+wordlengths the same way. This module is that split for the TPU port:
+
+  * :class:`Filter2D` — the hashable spec: window size, reduction form,
+    :class:`~repro.core.border_spec.BorderSpec`, separable mode, bank
+    size, the frame's storage-dtype contract and the (gain-free half of
+    the) :class:`~repro.core.requant.RequantSpec` epilogue.
+  * ``spec.compile(frame_spec, execution=...)`` — plans once: picks the
+    executor (``'auto'`` selects from the static ``HaloPlan`` accounting
+    in ``kernels/filter2d/halo`` — VMEM working set vs a ``vmem_budget``
+    knob, mesh presence), derives ``strip_h``/``tile_w`` from the budget
+    instead of fixed defaults, and builds ONE jitted executable.
+  * :class:`CompiledFilter` — ``__call__(frame, coeffs_or_factors,
+    gains=None)`` treats coefficients, separable factors and per-filter
+    requant gains as *traced* operands: swapping any of them hits the jit
+    cache (``cache_size()`` is the counter tests pin); changing the spec,
+    the frame geometry or the executor compiles fresh by construction
+    (each compiled pipeline owns its cache).
+
+The seven historical entry points (``filter2d``, ``filter_bank``,
+``filter2d_xla``, ``filter2d_streaming``, ``filter2d_sharded``,
+``filter2d_pallas``, ``filter_bank_pallas``) are thin wrappers over this
+path; ``compile`` results are memoised so the wrappers stay cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.border_spec import BorderSpec, quantize_constant
+from repro.core.filter2d import (FORMS, _filter2d_impl, _filter2d_sep_impl,
+                                 _filter2d_xla_impl, _filter_bank_impl,
+                                 apply_requant, apply_requant_params,
+                                 is_fixed_point)
+from repro.core.requant import RequantSpec
+from repro.core.streaming import (_filter2d_streaming_impl,
+                                  strip_height_for_vmem)
+from repro.kernels.filter2d import halo
+from repro.kernels.filter2d import kernel as K
+from repro.kernels.filter2d import ops
+
+DEFAULT_VMEM_BUDGET = halo.DEFAULT_VMEM_BUDGET
+
+EXECUTIONS = ("auto", "core", "xla", "pallas", "streaming", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter2D:
+    """The static structure of a 2D filter — everything that shapes the
+    compiled pipeline, nothing that can be swapped at line rate.
+
+    ``window``      w of the w×w stencil (the ``(w-1)/2``-radius halo).
+    ``form``        reduction layout (paper §II): direct | transposed |
+                    tree | compress. The XLA executor infers its own.
+    ``border``      :class:`BorderSpec` policy (+ constant) — paper §III.
+                    A bare policy string is accepted and normalised.
+    ``separable``   ``True`` compiles the 2w-MAC two-pass pipeline; calls
+                    then take ``(u, v)`` factor operands instead of a
+                    ``[w, w]`` coefficient block. (Mode only: the factors
+                    themselves are runtime data.)
+    ``num_filters`` bank size N; calls take ``[N, w, w]`` coefficients and
+                    outputs grow a trailing bank axis (the coefficient
+                    file, paper §I).
+    ``dtype``       the frame's *storage* dtype contract (name): float
+                    dtypes stream as-is; int8/uint8/int16 take the
+                    fixed-point datapath (storage-width stream, int32
+                    MAC — paper §IV).
+    ``requant``     the fused output-scaler epilogue policy. Only the
+                    gain-free half (rounding mode + storage dtype) shapes
+                    the pipeline; the (multiplier, shift) gains ride every
+                    call as traced operands (``gains=``), defaulting to
+                    the ones carried here.
+
+    Hashable and order-comparable by value: usable as a jit static
+    argument and as the compile-cache key.
+    """
+
+    window: int
+    form: str = "direct"
+    border: BorderSpec = BorderSpec("mirror")
+    separable: bool = False
+    num_filters: int = 1
+    dtype: str = "float32"
+    requant: Optional[RequantSpec] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "window", int(self.window))
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1; got {self.window}")
+        if self.form not in FORMS:
+            raise ValueError(f"unknown form {self.form!r}; choose from "
+                             f"{FORMS}")
+        if isinstance(self.border, str):
+            object.__setattr__(self, "border", BorderSpec(self.border))
+        if not isinstance(self.border, BorderSpec):
+            raise TypeError("border must be a BorderSpec (or a policy "
+                            f"name); got {type(self.border).__name__}")
+        object.__setattr__(self, "separable", bool(self.separable))
+        object.__setattr__(self, "num_filters", int(self.num_filters))
+        if self.num_filters < 1:
+            raise ValueError("num_filters must be >= 1")
+        if self.separable and self.num_filters > 1:
+            raise ValueError("separable pipelines are single-filter: "
+                             "factor banks are not supported")
+        dt = jnp.dtype(self.dtype)
+        object.__setattr__(self, "dtype", dt.name)
+        if not (jnp.issubdtype(dt, jnp.floating) or is_fixed_point(dt)):
+            raise ValueError(
+                f"dtype {dt.name!r} is not a supported storage contract: "
+                "float dtypes or the fixed-point set int8/uint8/int16")
+        if self.requant is not None:
+            # shared validation: requant is the fixed-point epilogue and
+            # its per-filter tuples must match the bank size
+            from repro.core.filter2d import resolve_requant
+            resolve_requant(dt, self.requant, num_filters=self.num_filters)
+
+    @property
+    def radius(self) -> int:
+        return (self.window - 1) // 2
+
+    def compile(self, frame_spec, execution: str = "auto", *,
+                mesh=None, axis: str = "data",
+                vmem_budget: Optional[int] = None,
+                strip_h: Optional[int] = None,
+                tile_w: Optional[int] = None,
+                regime: Optional[str] = None,
+                interpret: Optional[bool] = None) -> "CompiledFilter":
+        """Plan the pipeline for one frame geometry and executor.
+
+        ``frame_spec``: a shape tuple ([H,W] | [H,W,C] | [B,H,W,C]), a
+        ``jax.ShapeDtypeStruct`` or an array — dtype-carrying specs must
+        match the spec's storage contract. ``execution='auto'`` selects
+        from the static plan accounting (see :class:`CompiledFilter`);
+        ``vmem_budget`` (default 8 MiB) bounds the per-step working set
+        and is what ``strip_h``/``tile_w`` are derived from when not
+        given. Results are memoised: the same (spec, geometry, knobs)
+        returns the same ``CompiledFilter`` — and therefore the same jit
+        cache — so wrapping entry points stay cheap per call.
+        """
+        shape = _frame_shape(frame_spec, self.dtype)
+        if execution not in EXECUTIONS:
+            raise ValueError(f"unknown execution {execution!r}; choose "
+                             f"from {EXECUTIONS}")
+        return _compiled(self, shape, execution, mesh, axis, vmem_budget,
+                         strip_h, tile_w, regime, interpret)
+
+
+def _frame_shape(frame_spec, dtype_name: str) -> Tuple[int, ...]:
+    if isinstance(frame_spec, (tuple, list)):
+        shape = tuple(int(s) for s in frame_spec)
+    else:
+        try:
+            shape = tuple(int(s) for s in frame_spec.shape)
+            got = jnp.dtype(frame_spec.dtype).name
+        except AttributeError:
+            raise TypeError(
+                "frame_spec must be a shape tuple, a ShapeDtypeStruct or "
+                f"an array; got {type(frame_spec).__name__}") from None
+        if got != dtype_name:
+            raise ValueError(
+                f"frame dtype {got!r} disagrees with the spec's storage "
+                f"contract {dtype_name!r}; build a spec for this dtype")
+    if len(shape) not in (2, 3, 4):
+        raise ValueError("frames are [H,W] | [H,W,C] | [B,H,W,C]; got "
+                         f"shape {shape}")
+    return shape
+
+
+@functools.lru_cache(maxsize=256)
+def _compiled(spec, shape, execution, mesh, axis, vmem_budget, strip_h,
+              tile_w, regime, interpret) -> "CompiledFilter":
+    return CompiledFilter(spec, shape, execution, mesh=mesh, axis=axis,
+                          vmem_budget=vmem_budget, strip_h=strip_h,
+                          tile_w=tile_w, regime=regime, interpret=interpret)
+
+
+class CompiledFilter:
+    """One planned, jitted filter pipeline (build via ``Filter2D.compile``).
+
+    ``__call__(frame, coeffs_or_factors, gains=None)`` executes it:
+    coefficients (``[w, w]``, ``[N, w, w]`` for banks, or ``(u, v)``
+    factors for separable pipelines) and requant gains are *traced*
+    operands — swapping them reuses the compiled executable
+    (``cache_size()`` stays put), which is the served-pipeline property
+    the paper's runtime coefficient file provides in hardware.
+
+    ``execution='auto'`` selection, from static accounting only:
+
+      1. a mesh was supplied            → ``'sharded'`` (halo-exchange);
+      2. the whole plane fits the VMEM budget (pixel-cache regime —
+         ``stream_vmem_working_set`` of the frame-resident plan ≤
+         ``vmem_budget``)               → ``'pallas'`` (``regime='small'``);
+      3. otherwise                      → ``'streaming'`` (row-buffer
+         strip scan, strip height derived from the budget), falling back
+         to the Pallas stream regime for shapes the strip scan cannot take
+         (banks, separable pipelines, ``neglect`` borders).
+
+    The resolved choice is ``self.execution``; ``self.plan`` carries the
+    static :class:`~repro.kernels.filter2d.halo.HaloPlan` accounting
+    (``hbm_bytes_per_pixel()``, ``vmem_working_set()``) for the derived
+    geometry, so budget/bandwidth claims are auditable per pipeline.
+    """
+
+    def __init__(self, spec: Filter2D, frame_shape: Tuple[int, ...],
+                 execution: str, *, mesh=None, axis: str = "data",
+                 vmem_budget: Optional[int] = None,
+                 strip_h: Optional[int] = None,
+                 tile_w: Optional[int] = None,
+                 regime: Optional[str] = None,
+                 interpret: Optional[bool] = None):
+        self.spec = spec
+        self.frame_shape = frame_shape
+        self.mesh = mesh
+        self.axis = axis
+        self.vmem_budget = (DEFAULT_VMEM_BUDGET if vmem_budget is None
+                            else int(vmem_budget))
+        self.interpret = (ops._default_interpret() if interpret is None
+                          else bool(interpret))
+
+        nd = len(frame_shape)
+        self._H, self._W = frame_shape[1:3] if nd == 4 else frame_shape[:2]
+        self._C = frame_shape[-1] if nd >= 3 else 1
+        w, r = spec.window, spec.radius
+        dt = jnp.dtype(spec.dtype)
+        db, acc_b, out_b = halo.datapath_byte_widths(dt, spec.requant)
+        same = spec.border.same_size
+        Ho = self._H if same else max(self._H - 2 * r, 1)
+        Wo = self._W if same else max(self._W - 2 * r, 1)
+        # the pixel-cache (frame-resident) working set: the number 'auto'
+        # compares against the budget — regime selection IS the paper's
+        # small-frame vs row-buffer split, decided from static accounting.
+        # The output tile is lane-padded exactly as the small-regime plan
+        # lays it out, so this estimate equals plan_vmem_working_set of
+        # the plan 'small' would build (no under-budget mis-selection on
+        # narrow unaligned frames).
+        wo_pad = Wo + (-Wo) % halo.LANE
+        self.resident_vmem_bytes = K.stream_vmem_working_set(
+            Ho, wo_pad, w, db, separable=spec.separable,
+            num_filters=spec.num_filters, acc_dtype_bytes=acc_b,
+            out_dtype_bytes=out_b)
+
+        if execution == "auto":
+            if mesh is not None:
+                execution = "sharded"
+            elif self.resident_vmem_bytes <= self.vmem_budget:
+                execution = "pallas"
+                regime = "small" if regime is None else regime
+            elif (spec.num_filters == 1 and not spec.separable and same
+                  and self._H >= max(w - 1, 1)):
+                execution = "streaming"
+            else:
+                execution = "pallas"
+                regime = "stream" if regime is None else regime
+        self.execution = execution
+
+        if execution == "sharded" and mesh is None:
+            raise ValueError("execution='sharded' needs a mesh")
+        if mesh is not None and execution != "sharded":
+            raise ValueError(f"a mesh was supplied but execution is "
+                             f"{execution!r}; meshes drive 'sharded' "
+                             "(or 'auto')")
+        if execution in ("xla", "streaming", "sharded"):
+            if spec.num_filters > 1:
+                raise ValueError(f"execution={execution!r} runs single "
+                                 "filters; banks take 'core' or 'pallas'")
+            if spec.separable:
+                raise ValueError(f"execution={execution!r} has no "
+                                 "separable path; use 'core' or 'pallas'")
+
+        self.regime = None
+        self.strip_h = None
+        self.tile_w = None
+        self.plan = None
+        if execution == "pallas":
+            self.regime = "stream" if regime is None else regime
+            if self.regime == "stream" and (strip_h is None
+                                            or tile_w is None):
+                # derive the free knob(s) from the budget, holding any
+                # caller-supplied one fixed
+                strip_h, tile_w = halo.derive_strip_tile(
+                    self._H, self._W, w, dtype=dt,
+                    vmem_budget=self.vmem_budget,
+                    num_filters=spec.num_filters, separable=spec.separable,
+                    requant=spec.requant, same_size=same,
+                    strip_h=strip_h, tile_w=tile_w)
+            elif self.regime == "small":
+                strip_h = Ho if strip_h is None else strip_h
+                tile_w = Wo if tile_w is None else tile_w
+            S, Tw, _, _ = ops.resolve_strip_tile(
+                self._H, self._W, w, spec.border, self.regime, strip_h,
+                tile_w)
+            self.strip_h, self.tile_w = S, Tw
+            # the same plan the kernel will run (gain-free requant half):
+            # geometry errors (frame below the policy's minimum extent)
+            # surface here, at plan time
+            self.plan = halo.make_plan(
+                self._H, self._W, w, spec.border, S, Tw, dtype=dt,
+                requant=(spec.requant.gain_free()
+                         if spec.requant is not None else None))
+        else:
+            if execution == "streaming":
+                # the jnp scan widens fixed-point strips to the int32
+                # accumulator before filtering: derive the strip at the
+                # ACCUMULATOR width so the budget holds for the working
+                # set the scan actually carries, not the storage bytes
+                self.strip_h = (self._streaming_strip(acc_b)
+                                if strip_h is None else int(strip_h))
+            # accounting-only plan (informational for the non-Pallas
+            # executors; their own impls own validation/errors)
+            S = self.strip_h if self.strip_h is not None else Ho
+            try:
+                self.plan = halo.make_plan(
+                    self._H, self._W, w, spec.border, S, Wo, dtype=dt,
+                    requant=(spec.requant.gain_free()
+                             if spec.requant is not None else None))
+            except Exception:
+                self.plan = None
+
+        self._fn = jax.jit(self._build())
+
+    # -- planning helpers --------------------------------------------------
+
+    def _streaming_strip(self, dtype_bytes: int) -> int:
+        """Largest divisor of H within the budget-derived strip height
+        (the scan needs H % strip == 0 and strip >= w-1)."""
+        H, w = self._H, self.spec.window
+        target = strip_height_for_vmem(self._W, self._C, w,
+                                       self.vmem_budget, dtype_bytes)
+        lo = max(w - 1, 1)
+        divs = [d for d in range(1, H + 1) if H % d == 0]
+        ok = [d for d in divs if lo <= d <= max(target, lo)]
+        if ok:
+            return max(ok)
+        over = [d for d in divs if d >= lo]
+        return min(over) if over else H
+
+    # -- executable --------------------------------------------------------
+
+    def _build(self):
+        spec = self.spec
+        border = spec.border
+        rq = spec.requant
+        dt = jnp.dtype(spec.dtype)
+        fixed = is_fixed_point(dt)
+
+        def _epilogue(y, q):
+            if rq is None or q is None:
+                return y
+            if spec.num_filters > 1:    # bank axis is last: [.., N]
+                return apply_requant(y, q[:, 0], q[:, 1],
+                                     rounding=rq.rounding,
+                                     out_dtype=rq.np_dtype)
+            return apply_requant_params(y, q, rq)
+
+        if self.execution == "core":
+            qc = quantize_constant(border.constant, dt)
+            if spec.separable:
+                def impl(frame, co, q=None):
+                    y = _filter2d_sep_impl(
+                        frame, co[0], co[1], border_policy=border.policy,
+                        border_constant=jnp.asarray(qc))
+                    return _epilogue(y, q)
+            elif spec.num_filters == 1:
+                def impl(frame, co, q=None):
+                    y = _filter2d_impl(
+                        frame, co, form=spec.form,
+                        border_policy=border.policy,
+                        border_constant=jnp.asarray(qc))
+                    return _epilogue(y, q)
+            else:
+                def impl(frame, co, q=None):
+                    y = _filter_bank_impl(frame, co, form=spec.form,
+                                          border=border)
+                    return _epilogue(y, q)
+            return impl
+
+        if self.execution == "xla":
+            def impl(frame, co, q=None):
+                return _epilogue(_filter2d_xla_impl(frame, co,
+                                                    border=border), q)
+            return impl
+
+        if self.execution == "streaming":
+            strip_h = self.strip_h
+            rq_static = rq.gain_free() if rq is not None else None
+
+            def impl(frame, co, q=None):
+                # the scan requantises each emitted strip itself (traced
+                # gains operand): the output stream leaves at storage
+                # width strip by strip, not via a post-scan pass
+                return _filter2d_streaming_impl(frame, co, q,
+                                                form=spec.form,
+                                                border=border,
+                                                strip_h=strip_h,
+                                                requant=rq_static)
+            return impl
+
+        if self.execution == "sharded":
+            from repro.core.distributed import _filter2d_sharded_impl
+            mesh, ax = self.mesh, self.axis
+            rq_static = rq.gain_free() if rq is not None else None
+
+            def impl(frame, co, q=None):
+                # gains ride into the shard_map as a replicated traced
+                # operand: each shard requantises its own tile, so the
+                # gathered tiles stay storage-width
+                return _filter2d_sharded_impl(frame, co, mesh, q, axis=ax,
+                                              form=spec.form, border=border,
+                                              requant=rq_static)
+            return impl
+
+        assert self.execution == "pallas", self.execution
+        rq_static = rq.gain_free() if rq is not None else None
+        form = "separable" if spec.separable else spec.form
+        n = spec.num_filters
+        regime, S, Tw = self.regime, self.strip_h, self.tile_w
+        interpret = self.interpret
+
+        def impl(frame, co, q=None):
+            planes, tag = ops._fold_planes(frame)
+            if spec.separable:
+                co_k = co.astype(jnp.int32 if fixed else planes.dtype)[None]
+            elif fixed:
+                co_k = co.astype(jnp.int32)
+                co_k = co_k[None] if n == 1 else co_k
+            else:
+                co_k = co[None] if n == 1 else co
+            y = ops._filter2d_pallas_planes(
+                planes, co_k, q, form=form, border=border, regime=regime,
+                strip_h=S, tile_w=Tw, interpret=interpret,
+                requant=rq_static)
+            return ops._unfold(y, tag, keep_bank=n > 1)
+        return impl
+
+    # -- operand normalisation ---------------------------------------------
+
+    def _coeff_operand(self, coeffs):
+        w, n = self.spec.window, self.spec.num_filters
+        if self.spec.separable:
+            if isinstance(coeffs, (tuple, list)):
+                if len(coeffs) != 2:
+                    raise ValueError("separable pipelines take (u, v) — "
+                                     "exactly two 1D factors")
+                co = jnp.stack([jnp.asarray(coeffs[0]),
+                                jnp.asarray(coeffs[1])])
+            else:
+                co = jnp.asarray(coeffs)
+            if co.shape != (2, w):
+                raise ValueError(
+                    f"separable pipeline takes (u, v) factors of length "
+                    f"{w} (operand shape (2, {w})); got {co.shape}")
+            return co
+        co = jnp.asarray(coeffs)
+        want = (w, w) if n == 1 else (n, w, w)
+        if co.shape != want:
+            raise ValueError(f"this pipeline takes coefficients of shape "
+                             f"{want}; got {co.shape}")
+        return co
+
+    def _gain_operand(self, gains):
+        rq, n = self.spec.requant, self.spec.num_filters
+        if gains is None:
+            return jnp.asarray(rq.params(n), jnp.int32)
+        if isinstance(gains, RequantSpec):
+            if gains.gain_free() != rq.gain_free():
+                raise ValueError(
+                    "gains spec disagrees with the compiled epilogue "
+                    f"(rounding/storage dtype): {gains.gain_free()} vs "
+                    f"{rq.gain_free()}; recompile for a new epilogue")
+            return jnp.asarray(gains.params(n), jnp.int32)
+        g = jnp.asarray(gains, jnp.int32)
+        if g.shape == (2,):
+            g = jnp.broadcast_to(g[None], (n, 2))
+        if g.shape != (n, 2):
+            raise ValueError(f"gains must be a RequantSpec, a "
+                             f"(multiplier, shift) pair or an [{n}, 2] "
+                             f"table; got shape {g.shape}")
+        return g
+
+    # -- execution ---------------------------------------------------------
+
+    def __call__(self, frame, coeffs, gains=None):
+        if tuple(frame.shape) != self.frame_shape:
+            raise ValueError(
+                f"pipeline compiled for frame shape {self.frame_shape}; "
+                f"got {tuple(frame.shape)} — compile for the new geometry")
+        if jnp.dtype(frame.dtype).name != self.spec.dtype:
+            raise ValueError(
+                f"pipeline compiled for dtype {self.spec.dtype!r}; got "
+                f"{jnp.dtype(frame.dtype).name!r}")
+        co = self._coeff_operand(coeffs)
+        if self.spec.requant is None:
+            if gains is not None:
+                raise ValueError("gains supplied but the spec carries no "
+                                 "requant epilogue")
+            return self._fn(frame, co)
+        return self._fn(frame, co, self._gain_operand(gains))
+
+    # -- introspection -----------------------------------------------------
+
+    def cache_size(self) -> int:
+        """Compiled-executable count for this pipeline: 1 after the first
+        call, and *still* 1 after any number of coefficient / factor /
+        gain swaps — the served-pipeline invariant tests pin."""
+        return self._fn._cache_size()
+
+    def vmem_working_set(self) -> Optional[int]:
+        """Per-step VMEM bytes of the planned geometry (from the plan)."""
+        if self.plan is None:
+            return None
+        return K.plan_vmem_working_set(self.plan,
+                                       num_filters=self.spec.num_filters,
+                                       separable=self.spec.separable)
+
+    def hbm_bytes_per_pixel(self) -> Optional[float]:
+        """Static HBM round-trip bytes/pixel of the planned geometry."""
+        if self.plan is None:
+            return None
+        return halo.hbm_bytes_per_pixel(self.plan)
+
+    def __repr__(self) -> str:
+        geo = ""
+        if self.execution == "pallas":
+            geo = (f", regime={self.regime!r}, strip_h={self.strip_h}, "
+                   f"tile_w={self.tile_w}")
+        elif self.execution == "streaming":
+            geo = f", strip_h={self.strip_h}"
+        return (f"CompiledFilter({self.spec!r}, frame={self.frame_shape}, "
+                f"execution={self.execution!r}{geo})")

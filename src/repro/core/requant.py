@@ -123,9 +123,15 @@ class RequantSpec:
         return dataclasses.replace(self, multiplier=1, shift=0)
 
     def params(self, n: int) -> Tuple[Tuple[int, int], ...]:
-        """((multiplier, shift), …) broadcast to ``n`` bank filters."""
+        """((multiplier, shift), …) broadcast to ``n`` bank filters.
+
+        Scalars AND length-1 tuples broadcast (the same rule
+        :attr:`num_filters` applies, so every spec that constructs is
+        usable); longer tuples must match the bank size exactly."""
         def bc(v):
             if isinstance(v, tuple):
+                if len(v) == 1:
+                    return v * n
                 if len(v) != n:
                     raise ValueError(
                         f"requant carries {len(v)} per-filter entries for a "
@@ -133,6 +139,77 @@ class RequantSpec:
                 return v
             return (v,) * n
         return tuple(zip(bc(self.multiplier), bc(self.shift)))
+
+    @classmethod
+    def unity_gain(cls, coeffs, dtype: str = "int8", *,
+                   rounding: str = "nearest",
+                   frame_dtype=None) -> "RequantSpec":
+        """Derive the unity-gain output scaler from the coefficient sum.
+
+        An integer filter of DC gain ``g = Σ coeffs`` scales a flat input
+        by ``g``; the unity-gain epilogue divides it back out:
+        ``multiplier / 2**shift ≈ 1 / g``, with the *largest* shift (the
+        most fractional precision) whose product still honours the int32
+        headroom contract — ``|acc·multiplier| + half-LSB`` must fit
+        int32 for the worst-case accumulator ``Σ|coeffs| · max|pixel|``
+        (the bound :func:`requantize_ref` asserts). ``frame_dtype`` is
+        the *input* storage dtype setting ``max|pixel|`` (defaults to the
+        output ``dtype``); coefficients must be integers (the fixed-point
+        MAC operand) with a non-zero sum.
+
+        ``coeffs`` may be one ``[w, w]`` filter or an ``[N, w, w]`` bank —
+        the bank form returns the per-filter (multiplier, shift) tuples,
+        one scaler per coefficient-file lane. Turnkey: with this spec a
+        box/gaussian pipeline's int8 output sits at the input's level
+        (±1 LSB of rounding), validated bit-exactly against
+        :func:`requantize_ref` in the tests.
+        """
+        k = np.asarray(coeffs)
+        if k.dtype.kind not in ("i", "u"):
+            raise ValueError(
+                "unity_gain derives fixed-point scalers from *integer* "
+                f"coefficients; got dtype {k.dtype.name}")
+        if k.ndim == 2:
+            banks = k[None]
+        elif k.ndim == 3:
+            banks = k
+        else:
+            raise ValueError(f"coeffs must be [w, w] or [N, w, w]; got "
+                             f"shape {k.shape}")
+        in_dt = np.dtype(dtype if frame_dtype is None else frame_dtype)
+        if in_dt.kind not in ("i", "u"):
+            raise ValueError(f"frame_dtype must be an integer storage "
+                             f"dtype; got {in_dt.name}")
+        info = np.iinfo(in_dt)
+        pix_max = max(abs(int(info.min)), int(info.max))
+        lim = 2 ** 31 - 1
+        ms, ss = [], []
+        for i, kf in enumerate(banks):
+            g = int(kf.sum())
+            if g == 0:
+                raise ValueError(
+                    f"filter {i} has zero coefficient sum: a zero-gain "
+                    "filter has no unity-gain scaler (pick gains by hand)")
+            acc_max = int(np.abs(kf.astype(np.int64)).sum()) * pix_max
+            for s in range(31, -1, -1):
+                m = int(np.rint(2 ** s / g))
+                if m == 0:
+                    continue
+                bias = (1 << (s - 1)) if (s and rounding == "nearest") else 0
+                if abs(m) <= lim and abs(m) * acc_max + bias <= lim:
+                    ms.append(m)
+                    ss.append(s)
+                    break
+            else:
+                raise ValueError(
+                    f"filter {i}: no (multiplier, shift) satisfies the "
+                    "int32 headroom contract — the accumulator range "
+                    f"Σ|coeffs|·max|pixel| = {acc_max} is too wide")
+        if k.ndim == 2:
+            return cls(multiplier=ms[0], shift=ss[0], rounding=rounding,
+                       dtype=dtype)
+        return cls(multiplier=tuple(ms), shift=tuple(ss), rounding=rounding,
+                   dtype=dtype)
 
 
 def round_shift_ref(prod: np.ndarray, shift: int, rounding: str

@@ -31,8 +31,8 @@ import jax.numpy as jnp
 
 from repro.core.border_spec import quantize_constant
 from repro.core.borders import BorderSpec, gather_rows
-from repro.core.filter2d import (FORMS, _FORM_FNS, _as_nhwc, _un_nhwc,
-                                 apply_requant_spec, filter2d,
+from repro.core.filter2d import (FORMS, _FORM_FNS, _as_nhwc, _filter2d_impl,
+                                 _un_nhwc, apply_requant_params,
                                  is_fixed_point, resolve_requant)
 from repro.core.requant import RequantSpec
 
@@ -51,27 +51,31 @@ def strip_height_for_vmem(width: int, channels: int, w: int,
 @functools.partial(
     jax.jit, static_argnames=("form", "border_policy", "strip_h", "border",
                               "requant"))
-def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
-                       form: str = "direct", border_policy: str = "mirror",
-                       strip_h: int = 64,
-                       border: Optional[BorderSpec] = None,
-                       requant: Optional[RequantSpec] = None) -> jax.Array:
-    """Filter a frame strip-by-strip with a carried (w−1)-row buffer.
-
-    Semantics identical to ``filter2d(...)`` for every same-size policy
-    (``zero``/``constant(c)``, ``replicate``/``duplicate``, ``reflect``/
-    ``mirror``, ``mirror_dup``, ``wrap``). Pass a full ``BorderSpec`` via
-    ``border`` (wins over ``border_policy``) for non-zero constants. Frame
-    height must divide by ``strip_h`` and ``strip_h >= w-1`` (the carry
-    must fit inside one strip). ``requant`` applies the same fused
-    epilogue contract as ``filter2d``: each emitted strip is scaled,
-    rounded and saturated to the spec's storage dtype, so the stream of
-    output strips is storage-width like the input stream.
-    """
+def _filter2d_streaming_impl(frame: jax.Array, coeffs: jax.Array,
+                             q_params: Optional[jax.Array] = None, *,
+                             form: str = "direct",
+                             border_policy: str = "mirror",
+                             strip_h: int = 64,
+                             border: Optional[BorderSpec] = None,
+                             requant: Optional[RequantSpec] = None
+                             ) -> jax.Array:
+    """The strip-scan executable behind :func:`filter2d_streaming` (and
+    the pipeline's ``execution='streaming'``). ``requant`` is the static
+    half of the epilogue (rounding mode + storage dtype shape the trace);
+    the (multiplier, shift) gains ride as the *traced* ``q_params``
+    ``[1, 2]`` operand — defaulting to the spec's own — so the pipeline
+    swaps gains without recompiling while each emitted strip still leaves
+    the scan at storage width (the PR-4 write-side contract)."""
     spec = border if border is not None else BorderSpec(border_policy)
     if spec.policy == "neglect":
         raise ValueError("streaming path does not support 'neglect'")
     rq = resolve_requant(frame.dtype, requant)
+    if rq is not None and q_params is None:
+        q_params = jnp.asarray(rq.params(1), jnp.int32)
+
+    def epilogue(y):
+        return y if rq is None else apply_requant_params(y, q_params, rq)
+
     # fixed-point: quantize constant(c) against the *storage* dtype first
     # (the shared rule), then run the stream in the int32 accumulator
     # dtype — bit-exact with core.filter2d and the Pallas kernels.
@@ -88,8 +92,10 @@ def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
     assert H % strip_h == 0 and strip_h >= w - 1, (H, strip_h, w)
     n_strips = H // strip_h
     if n_strips < 2:  # degenerate launch: whole frame is one strip
-        return filter2d(src_frame, src_coeffs, form=form, border=spec,
-                        requant=rq)
+        qc = jnp.asarray(quantize_constant(spec.constant, src_frame.dtype))
+        return epilogue(_filter2d_impl(src_frame, src_coeffs, form=form,
+                                       border_policy=spec.policy,
+                                       border_constant=qc))
 
     # Pre-extend columns once (width axis) — the column mux of the window
     # cache. This is index remap, not a padded HBM pass, under jit.
@@ -121,11 +127,10 @@ def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
                                   spec, axis=1)
         ext = jnp.where(i == 0, hi_first, ext)
         ext = jnp.where(i == n_strips - 1, hi_last, ext)
-        y = _FORM_FNS[form](ext, coeffs, strip_h, W)
-        if rq is not None:
-            # fused epilogue per emitted strip: the output stream leaves
-            # at storage width, exactly like the Pallas kernel's store
-            y = apply_requant_spec(y, rq)
+        # fused epilogue per emitted strip: the output stream leaves at
+        # storage width, exactly like the Pallas kernel's store (the
+        # traced gains are a scan constant)
+        y = epilogue(_FORM_FNS[form](ext, coeffs, strip_h, W))
         new_buf = strip[:, strip_h - r:] if r else row_buf
         return (new_buf, i + 1), y
 
@@ -135,3 +140,36 @@ def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
     _, ys = jax.lax.scan(step, init, (strips, nxt_strips))
     y = ys.swapaxes(0, 1).reshape(B, H, W, C)
     return _un_nhwc(y, add_b, add_c)
+
+
+def filter2d_streaming(frame: jax.Array, coeffs: jax.Array, *,
+                       form: str = "direct", border_policy: str = "mirror",
+                       strip_h: int = 64,
+                       border: Optional[BorderSpec] = None,
+                       requant: Optional[RequantSpec] = None) -> jax.Array:
+    """Filter a frame strip-by-strip with a carried (w−1)-row buffer.
+
+    Semantics identical to ``filter2d(...)`` for every same-size policy
+    (``zero``/``constant(c)``, ``replicate``/``duplicate``, ``reflect``/
+    ``mirror``, ``mirror_dup``, ``wrap``). Pass a full ``BorderSpec`` via
+    ``border`` (wins over ``border_policy``) for non-zero constants. Frame
+    height must divide by ``strip_h`` and ``strip_h >= w-1`` (the carry
+    must fit inside one strip). ``requant`` applies the same fused
+    epilogue contract as ``filter2d``: each emitted strip is scaled,
+    rounded and saturated to the spec's storage dtype, so the stream of
+    output strips is storage-width like the input stream.
+
+    Thin wrapper over ``core.pipeline.Filter2D``
+    (``execution='streaming'``) — prefer the compiled front door for
+    served pipelines; it can also derive ``strip_h`` from a VMEM budget
+    instead of taking it as a knob.
+    """
+    from repro.core.pipeline import Filter2D
+    spec_b = border if border is not None else BorderSpec(border_policy)
+    rq = resolve_requant(frame.dtype, requant)
+    spec = Filter2D(window=int(jnp.shape(coeffs)[-1]), form=form,
+                    border=spec_b,
+                    dtype=jnp.dtype(frame.dtype).name,
+                    requant=rq.gain_free() if rq is not None else None)
+    cf = spec.compile(frame, "streaming", strip_h=strip_h)
+    return cf(frame, coeffs, gains=rq)

@@ -1,9 +1,12 @@
 from repro.core.requant import RequantSpec
-from repro.kernels.filter2d.halo import (HaloPlan, hbm_bytes_per_pixel,
+from repro.kernels.filter2d.halo import (DEFAULT_VMEM_BUDGET, HaloPlan,
+                                         derive_strip_tile,
+                                         hbm_bytes_per_pixel,
                                          hbm_write_bytes_per_pixel,
                                          make_plan, read_amplification,
                                          read_bytes_per_pixel)
 from repro.kernels.filter2d.kernel import (acc_dtype, out_dtype,
+                                           plan_vmem_working_set,
                                            stream_vmem_working_set)
 from repro.kernels.filter2d.ops import filter2d_pallas, filter_bank_pallas
 from repro.kernels.filter2d.ref import filter2d_ref

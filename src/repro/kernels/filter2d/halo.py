@@ -48,6 +48,11 @@ from repro.core.requant import RequantSpec
 
 LANE = 128  # TPU lane width: last-dim alignment target
 
+# Default per-step VMEM budget for derived strip/tile geometry: matches the
+# conservative bound core/streaming uses (real cores hold ~16 MiB; half is
+# left for double buffering, the coefficient file and compiler spill).
+DEFAULT_VMEM_BUDGET = 8 * 2 ** 20
+
 
 # ---------------------------------------------------------------------------
 # Static geometry: axis classes and the halo plan
@@ -118,6 +123,7 @@ class HaloPlan:
     dtype_bytes: int = 4
     out_dtype_bytes: int = 4
     requant: Optional[RequantSpec] = None
+    acc_bytes: int = 4                   # MAC accumulator width (int32/float)
 
 
 def _axis_class(i: int, L: int, B: int, r: int, off: int) -> AxisClass:
@@ -156,6 +162,24 @@ def _axis_plan(L: int, B: int, r: int, same_size: bool) -> AxisPlan:
                     specials=tuple(specials[k] for k in sorted(specials)))
 
 
+def datapath_byte_widths(dtype, requant: Optional[RequantSpec] = None
+                         ) -> Tuple[int, int, int]:
+    """(storage, accumulator, output) byte widths of one datapath.
+
+    THE single statement of the fixed-point width rule (paper §IV):
+    integer frames stream at storage width and accumulate in int32; the
+    output leaves at the accumulator width unless a requantising epilogue
+    narrows it back to its storage dtype. ``make_plan``,
+    ``derive_strip_tile`` and the ``CompiledFilter`` planner all consume
+    this one helper so the auto-selection estimate can never drift from
+    the plan the kernel runs."""
+    db = int(np.dtype(dtype).itemsize)
+    integer = np.dtype(dtype).kind in ("i", "u")
+    acc = 4 if integer else db
+    out = requant.dtype_bytes if requant is not None else acc
+    return db, acc, out
+
+
 def make_plan(H: int, W: int, w: int, spec: BorderSpec, strip_h: int,
               tile_w: int, dtype=np.float32,
               requant: Optional[RequantSpec] = None) -> HaloPlan:
@@ -181,12 +205,7 @@ def make_plan(H: int, W: int, w: int, spec: BorderSpec, strip_h: int,
     if requant is not None and not integer:
         raise ValueError("requant is the fixed-point epilogue; "
                          f"storage dtype {np.dtype(dtype).name} takes none")
-    if requant is not None:
-        out_bytes = requant.dtype_bytes
-    elif integer:
-        out_bytes = 4                      # int32 accumulator write-back
-    else:
-        out_bytes = int(np.dtype(dtype).itemsize)
+    db, acc_bytes, out_bytes = datapath_byte_widths(dtype, requant)
     rows = _axis_plan(H, strip_h, r, spec.same_size)
     cols = _axis_plan(W, tile_w, r, spec.same_size)
     eh = rows.block + 2 * r
@@ -195,8 +214,70 @@ def make_plan(H: int, W: int, w: int, spec: BorderSpec, strip_h: int,
     return HaloPlan(policy=spec.policy,
                     constant=quantize_constant(spec.constant, dtype),
                     rows=rows, cols=cols, eh=eh, ew=ew,
-                    dtype_bytes=int(np.dtype(dtype).itemsize),
-                    out_dtype_bytes=out_bytes, requant=requant)
+                    dtype_bytes=db, out_dtype_bytes=out_bytes,
+                    requant=requant, acc_bytes=acc_bytes)
+
+
+def derive_strip_tile(H: int, W: int, w: int, *, dtype=np.float32,
+                      vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                      num_filters: int = 1, separable: bool = False,
+                      requant: Optional[RequantSpec] = None,
+                      same_size: bool = True,
+                      strip_h: Optional[int] = None,
+                      tile_w: Optional[int] = None) -> Tuple[int, int]:
+    """Pick ``(strip_h, tile_w)`` for a stream plan from a VMEM budget.
+
+    The autotuning rule the ROADMAP asked for, from static accounting only
+    (the same terms as ``kernel.stream_vmem_working_set``): prefer the
+    widest lane-aligned tile that still leaves a usefully deep strip —
+    full-width tiles pay no column-halo re-reads, so read amplification
+    stays ≈ 1 + 2r/strip — then spend every remaining budget byte on strip
+    depth (narrow storage dtypes and a requantised output tile both free
+    VMEM, which lands here as deeper strips). Halving the tile is only
+    worth it when the budget cannot hold ``max(2r, 8)`` rows at the
+    current width. Degenerate budgets clamp to the minimum viable strip
+    (the plan then overruns the budget rather than breaking the
+    ``strip >= 2r`` invariant multi-strip plans require).
+
+    A caller-supplied ``strip_h``/``tile_w`` is honoured verbatim and only
+    the *free* knob is derived against it: a fixed tile gets the deepest
+    strip the budget holds at that width; a fixed strip gets the widest
+    tile that still fits that many rows.
+    """
+    r = (w - 1) // 2
+    Ho = H if same_size else max(H - 2 * r, 1)
+    Wo = W if same_size else max(W - 2 * r, 1)
+    db, acc_b, out_b = datapath_byte_widths(dtype, requant)
+    coeff = num_filters * (2 * w if separable else w * w) * acc_b
+    s_min = max(2 * r, 8)
+    wo_pad = Wo + (-Wo) % LANE
+
+    def max_strip(tile: int) -> int:
+        ew = tile + 2 * r
+        ew += (-ew) % LANE
+        per_row = ew * db + tile * out_b
+        avail = vmem_budget - coeff - 2 * r * ew * db
+        return int(avail // per_row) if avail > 0 else 0
+
+    if tile_w is not None:
+        tile = max(min(tile_w + (-tile_w) % LANE, wo_pad), LANE)
+        s = max_strip(tile)
+    else:
+        want = s_min if strip_h is None else max(int(strip_h), s_min)
+        tile = wo_pad
+        while True:
+            s = max_strip(tile)
+            if s >= want or tile <= LANE:
+                break
+            tile = max(LANE, tile // 2 - (tile // 2) % LANE)
+    if strip_h is not None:
+        return max(min(int(strip_h), Ho), 1), int(tile)
+    s = max(s, s_min)
+    if s > 8:
+        # sublane-align deep strips, never dropping below the s_min floor
+        # (multi-strip plans require strip >= 2r)
+        s = max(s - s % 8, s_min)
+    return max(min(s, Ho), 1), int(tile)
 
 
 def read_amplification(plan: HaloPlan) -> float:

@@ -259,6 +259,24 @@ def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
     )(*operands)
 
 
+def plan_vmem_working_set(plan: HaloPlan, *, num_filters: int = 1,
+                          separable: bool = False) -> int:
+    """VMEM bytes per grid step straight from a *built* plan.
+
+    The plan-exact twin of :func:`stream_vmem_working_set`: the scratch is
+    the plan's own ``eh × ew`` (lane padding and halo margins included) at
+    storage width, the output tile ``strip × tile`` at the plan's write
+    width, and the coefficient file at the accumulator width. This is what
+    the ``CompiledFilter`` front door reports (and what its
+    ``execution='auto'`` selection audits against the ``vmem_budget``
+    knob) — one number per compiled pipeline, no re-derivation."""
+    w = 2 * plan.rows.r + 1
+    scratch = plan.eh * plan.ew * plan.dtype_bytes
+    out_tile = plan.rows.block * plan.cols.block * plan.out_dtype_bytes
+    coeff = num_filters * (2 * w if separable else w * w) * plan.acc_bytes
+    return scratch + out_tile + coeff
+
+
 def stream_vmem_working_set(strip_h: int, tile_w: int, w: int,
                             dtype_bytes: int = 4, *,
                             separable: bool = False,

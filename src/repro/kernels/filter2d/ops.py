@@ -1,6 +1,9 @@
 """jit'd public wrappers for the filter2d Pallas kernels.
 
-The wrapper owns what the FPGA control unit owned:
+``filter2d_pallas``/``filter_bank_pallas`` are thin wrappers over the
+plan-and-execute front door (``core.pipeline.Filter2D`` →
+``CompiledFilter``); the plane-level executable ``_filter2d_pallas_planes``
+lives here and owns what the FPGA control unit owned:
   * strip/tile sizing: Ho split into row strips, W into lane-aligned (128)
     column tiles, so the per-step VMEM working set is bounded by
     strip_h × tile_w regardless of frame dimensions (8K-wide frames stream
@@ -31,8 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.border_spec import BorderSpec
-from repro.core.filter2d import (is_fixed_point, resolve_requant,
-                                 resolve_separable)
+from repro.core.filter2d import resolve_requant, resolve_separable
 from repro.core.requant import RequantSpec
 from repro.kernels.filter2d import halo
 from repro.kernels.filter2d import kernel as K
@@ -77,6 +79,32 @@ def _unfold(y: jax.Array, tag, keep_bank: bool) -> jax.Array:
     return y if keep_bank else y[..., 0]
 
 
+def resolve_strip_tile(H: int, W: int, w: int, border: BorderSpec,
+                       regime: str, strip_h: int, tile_w: int
+                       ) -> Tuple[int, int, int, int]:
+    """Clamp caller strip/tile knobs into plan geometry: ``(S, Tw, Ho, Wo)``.
+
+    ``small`` is the pixel-cache regime (one strip × one lane-padded tile =
+    the whole plane resident); ``stream`` clamps strips so multi-strip
+    plans keep ``S >= 2r`` (only the first/last strips ever touch a frame
+    edge) and lane-aligns column tiles. Shared by the kernel wrapper and
+    the ``CompiledFilter`` planner so the accounting plan the pipeline
+    reports is byte-identical to the plan the kernel runs."""
+    r = (w - 1) // 2
+    if border.same_size:
+        Ho, Wo = H, W
+    else:
+        Ho, Wo = H - 2 * r, W - 2 * r
+    if regime == "small":
+        S, Tw = Ho, Wo + ((-Wo) % LANE)
+    elif regime == "stream":
+        S = max(min(strip_h, Ho), min(2 * r, Ho), 1)
+        Tw = min(tile_w + ((-tile_w) % LANE), Wo + ((-Wo) % LANE))
+    else:
+        raise ValueError(regime)
+    return S, Tw, Ho, Wo
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("form", "border", "regime", "strip_h", "tile_w",
@@ -96,24 +124,8 @@ def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array,
     operand, so a served pipeline swaps gains without recompiling."""
     M, H, W = planes.shape
     w = coeffs.shape[-1]
-    r = (w - 1) // 2
-    if border.same_size:
-        Ho, Wo = H, W
-    else:
-        Ho, Wo = H - 2 * r, W - 2 * r
-
-    if regime == "small":
-        # pixel-cache regime: one strip × one tile = the whole plane
-        # (halo-extended) resident in the VMEM scratch.
-        S, Tw = Ho, Wo + ((-Wo) % LANE)
-    elif regime == "stream":
-        # row-buffer regime: strips clamped so multi-strip plans keep
-        # S >= 2r (only the first/last strips ever touch a frame edge);
-        # column tiles lane-aligned.
-        S = max(min(strip_h, Ho), min(2 * r, Ho), 1)
-        Tw = min(tile_w + ((-tile_w) % LANE), Wo + ((-Wo) % LANE))
-    else:
-        raise ValueError(regime)
+    S, Tw, Ho, Wo = resolve_strip_tile(H, W, w, border, regime, strip_h,
+                                       tile_w)
 
     # the plan carries the *storage* dtype AND the output epilogue: byte
     # accounting and the quantized constant(c) follow the narrow stream,
@@ -123,34 +135,6 @@ def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array,
     y = K.filter2d_halo(planes, coeffs, plan, q_params=q_params, form=form,
                         interpret=interpret)
     return y[:, :, :Ho, :Wo]
-
-
-def _coeff_operand(frame: jax.Array, coeffs: jax.Array, form: str,
-                   separable) -> Tuple[jax.Array, str]:
-    """Resolve the separable knob into the kernel coefficient operand:
-    [1, w, w] for the 2D forms, [1, 2, w] (u, v) for the fused fast path.
-    Fixed-point frames take int32 coefficients (the wide MAC operand,
-    mirroring core.filter2d); the frame itself stays at storage width."""
-    uv = resolve_separable(frame.dtype, coeffs, separable)
-    cdtype = jnp.int32 if is_fixed_point(frame.dtype) else frame.dtype
-    if uv is None:
-        co = jnp.asarray(coeffs)[None]
-        return (co.astype(jnp.int32) if is_fixed_point(frame.dtype)
-                else co), form
-    # factors: SVD-detected for float frames, or the caller's explicit
-    # exact (u, v) — the only route for fixed-point frames
-    return jnp.stack([jnp.asarray(uv[0]), jnp.asarray(uv[1])]).astype(
-        cdtype)[None], "separable"
-
-
-def _requant_operand(rq: Optional[RequantSpec], n: int):
-    """Split a resolved spec into its trace-shaping static half
-    (``gain_free()``) and the traced [N, 2] (multiplier, shift) table —
-    gains are runtime data like the coefficients, so swapping them hits
-    the jit cache."""
-    if rq is None:
-        return None, None
-    return rq.gain_free(), jnp.asarray(rq.params(n), jnp.int32)
 
 
 def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
@@ -185,17 +169,25 @@ def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
     stream is narrow in BOTH directions (an int8→int8 round trip moves
     ≈2 HBM bytes/pixel instead of ≈5). Without it the caller owns
     requantisation.
+
+    Thin wrapper over the plan-and-execute front door: prefer
+    ``core.pipeline.Filter2D(...).compile(frame, 'pallas')`` for served
+    pipelines — it caches the compiled plan and swaps coefficients,
+    separable factors and requant gains without retracing.
     """
+    from repro.core.pipeline import Filter2D
     interpret = _default_interpret() if interpret is None else interpret
     rq = resolve_requant(frame.dtype, requant)
-    planes, tag = _fold_planes(frame)
-    co, form = _coeff_operand(frame, coeffs, form, separable)
-    rq_static, q_params = _requant_operand(rq, 1)
-    y = _filter2d_pallas_planes(planes, co, q_params, form=form,
-                                border=border, regime=regime,
-                                strip_h=strip_h, tile_w=tile_w,
-                                interpret=interpret, requant=rq_static)
-    return _unfold(y, tag, keep_bank=False)
+    uv = resolve_separable(frame.dtype, coeffs, separable)
+    window = (int(jnp.shape(uv[0])[0]) if uv is not None
+              else int(jnp.shape(coeffs)[-1]))
+    spec = Filter2D(window=window, form=form, border=border,
+                    separable=uv is not None,
+                    dtype=jnp.dtype(frame.dtype).name,
+                    requant=rq.gain_free() if rq is not None else None)
+    cf = spec.compile(frame, "pallas", regime=regime, strip_h=strip_h,
+                      tile_w=tile_w, interpret=interpret)
+    return cf(frame, uv if uv is not None else coeffs, gains=rq)
 
 
 def filter_bank_pallas(frame: jax.Array, bank: jax.Array, *,
@@ -215,16 +207,18 @@ def filter_bank_pallas(frame: jax.Array, bank: jax.Array, *,
     bank lane requantised by its own (multiplier, shift) scaler (tuples in
     the spec, one entry per filter, riding the kernel's params operand)
     and stored at the spec's storage width.
+
+    Thin wrapper over ``core.pipeline.Filter2D`` (``num_filters=N``) —
+    prefer the compiled front door for served pipelines.
     """
+    from repro.core.pipeline import Filter2D
     interpret = _default_interpret() if interpret is None else interpret
-    rq = resolve_requant(frame.dtype, requant, num_filters=bank.shape[0])
-    planes, tag = _fold_planes(frame)
-    bank = jnp.asarray(bank)
-    if is_fixed_point(frame.dtype):
-        bank = bank.astype(jnp.int32)
-    rq_static, q_params = _requant_operand(rq, bank.shape[0])
-    y = _filter2d_pallas_planes(planes, bank, q_params, form=form,
-                                border=border, regime=regime,
-                                strip_h=strip_h, tile_w=tile_w,
-                                interpret=interpret, requant=rq_static)
-    return _unfold(y, tag, keep_bank=True)
+    n = int(jnp.shape(bank)[0])
+    rq = resolve_requant(frame.dtype, requant, num_filters=n)
+    spec = Filter2D(window=int(jnp.shape(bank)[-1]), form=form, border=border,
+                    num_filters=n,
+                    dtype=jnp.dtype(frame.dtype).name,
+                    requant=rq.gain_free() if rq is not None else None)
+    cf = spec.compile(frame, "pallas", regime=regime, strip_h=strip_h,
+                      tile_w=tile_w, interpret=interpret)
+    return cf(frame, bank, gains=rq)

@@ -1,0 +1,362 @@
+"""The plan-and-execute front door (Filter2D -> CompiledFilter).
+
+Acceptance pins of the API redesign:
+  * executor parity, driven through CompiledFilter: every executor ×
+    form × border policy × int8/float32 agrees with the core oracle
+    (bit-exact on the fixed-point datapath);
+  * cache stability: swapping coefficients, separable factors or requant
+    gains on a compiled pipeline triggers ZERO recompiles (the jit
+    cache-size counter), while changing form/border/dtype/execution
+    compiles fresh;
+  * 'auto' selection: sharded when a mesh is supplied, streaming when the
+    frame-resident working set exceeds the vmem_budget, pixel-cache
+    Pallas when it fits — and every auto-derived strip_h/tile_w keeps the
+    static hbm_bytes_per_pixel accounting inside the bench gate.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import filters
+from repro.core.border_spec import BorderSpec
+from repro.core.filter2d import filter2d, filter_bank
+from repro.core.pipeline import (DEFAULT_VMEM_BUDGET, EXECUTIONS,
+                                 CompiledFilter, Filter2D)
+from repro.core.requant import RequantSpec, requantize_ref
+from repro.kernels.filter2d import halo
+from repro.kernels.filter2d.kernel import (plan_vmem_working_set,
+                                           stream_vmem_working_set)
+
+H, W = 32, 24
+EXECUTORS = tuple(e for e in EXECUTIONS if e != "core")  # the five modes
+
+
+def _frame(rng, dtype):
+    if np.dtype(dtype).kind in ("i", "u"):
+        return rng.integers(-20, 20, (H, W)).astype(dtype)
+    return rng.standard_normal((H, W)).astype(dtype)
+
+
+def _kernel(rng, dtype, w=5):
+    if np.dtype(dtype).kind in ("i", "u"):
+        return rng.integers(-4, 5, (w, w)).astype(np.int32)
+    return filters.gaussian(w).astype(np.float32)
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _compile(spec, x, execution):
+    kw = {"strip_h": 8, "tile_w": 128}
+    if execution == "sharded":
+        kw = {"mesh": _mesh1()}
+    return spec.compile(x, execution, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Executor parity vs the core oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("execution", EXECUTORS)
+@pytest.mark.parametrize("form", ["direct", "transposed", "tree",
+                                  "compress"])
+@pytest.mark.parametrize("policy", ["mirror", "constant", "wrap"])
+@pytest.mark.parametrize("dtype", [np.float32, np.int8])
+def test_executor_parity(execution, form, policy, dtype, rng):
+    """One spec, five executors, one oracle: every compiled pipeline
+    agrees with core.filter2d (bit-exact on the int8 datapath; the XLA
+    executor infers its own reduction structure, so float parity there is
+    to tolerance like every other form pair)."""
+    x = jnp.asarray(_frame(rng, dtype))
+    k = jnp.asarray(_kernel(rng, dtype))
+    border = BorderSpec(policy, 2.0)
+    ref = filter2d(x, k, form=form, border=border)
+    spec = Filter2D(window=5, form=form, border=border,
+                    dtype=np.dtype(dtype).name)
+    cf = _compile(spec, x, execution)
+    got = cf(x, k)
+    assert got.shape == ref.shape and got.dtype == ref.dtype
+    if np.dtype(dtype).kind in ("i", "u"):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("execution", EXECUTORS)
+def test_executor_parity_requant(execution, rng):
+    """The requantising epilogue lands bit-identically on every executor
+    (the pipeline applies it with traced gains; the oracle with static
+    ones) — pinned against the numpy reference, not just the oracle."""
+    x = _frame(rng, np.int8)
+    k = _kernel(rng, np.int8)
+    rq = RequantSpec.unity_gain(k, "int8")
+    ref = filter2d(jnp.asarray(x), jnp.asarray(k), requant=rq)
+    spec = Filter2D(window=5, dtype="int8", requant=rq.gain_free())
+    cf = _compile(spec, jnp.asarray(x), execution)
+    got = cf(jnp.asarray(x), jnp.asarray(k), gains=rq)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # and the epilogue itself against the int64 numpy reference
+    acc = filter2d(jnp.asarray(x), jnp.asarray(k))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  requantize_ref(np.asarray(acc), rq))
+
+
+def test_bank_and_separable_parity(rng):
+    """Bank pipelines (num_filters=N) and separable pipelines ((u, v)
+    factor operands) agree with their core oracles on both executors that
+    support them."""
+    x = jnp.asarray(_frame(rng, np.float32))
+    bank = jnp.stack([jnp.asarray(filters.gaussian(5)),
+                      jnp.asarray(filters.box(5)),
+                      jnp.asarray(filters.identity(5))])
+    ref = filter_bank(x, bank)
+    bspec = Filter2D(window=5, num_filters=3)
+    for execution in ("core", "pallas"):
+        cf = _compile(bspec, x, execution)
+        np.testing.assert_allclose(np.asarray(cf(x, bank)),
+                                   np.asarray(ref), rtol=3e-4, atol=3e-4)
+    u = np.array([0.25, 0.5, 0.25], np.float32)
+    sref = filter2d(x, jnp.asarray(np.outer(u, u)))
+    sspec = Filter2D(window=3, separable=True)
+    for execution in ("core", "pallas"):
+        cf = _compile(sspec, x, execution)
+        np.testing.assert_allclose(np.asarray(cf(x, (u, u))),
+                                   np.asarray(sref), rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Cache stability: traced operands never recompile; spec changes do
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("execution", ["core", "pallas", "streaming"])
+def test_coefficient_swap_zero_recompiles(execution, rng):
+    x = jnp.asarray(_frame(rng, np.float32))
+    spec = Filter2D(window=5)
+    cf = _compile(spec, x, execution)
+    a = cf(x, jnp.asarray(filters.gaussian(5)))
+    assert cf.cache_size() == 1
+    b = cf(x, jnp.asarray(filters.log_filter(5)))
+    assert cf.cache_size() == 1, "coefficient swap must hit the jit cache"
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("execution", ["core", "pallas"])
+def test_factor_swap_zero_recompiles(execution, rng):
+    x = jnp.asarray(_frame(rng, np.float32))
+    spec = Filter2D(window=3, separable=True)
+    cf = _compile(spec, x, execution)
+    g = np.array([0.25, 0.5, 0.25], np.float32)
+    b = np.full(3, 1 / 3, np.float32)
+    cf(x, (g, g))
+    assert cf.cache_size() == 1
+    cf(x, (b, b))
+    assert cf.cache_size() == 1, "factor swap must hit the jit cache"
+
+
+@pytest.mark.parametrize("execution", ["core", "pallas", "streaming"])
+def test_gain_swap_zero_recompiles(execution, rng):
+    """Per-call requant gains are runtime data like the coefficients: a
+    new (multiplier, shift) pair reuses the executable and still lands
+    bit-exactly on the numpy reference."""
+    x = _frame(rng, np.int8)
+    k = _kernel(rng, np.int8)
+    rq_a = RequantSpec(multiplier=3, shift=7, rounding="nearest",
+                       dtype="int8")
+    rq_b = RequantSpec(multiplier=-5, shift=9, rounding="nearest",
+                       dtype="int8")
+    spec = Filter2D(window=5, dtype="int8", requant=rq_a.gain_free())
+    cf = _compile(spec, jnp.asarray(x), execution)
+    acc = np.asarray(filter2d(jnp.asarray(x), jnp.asarray(k)))
+    got_a = cf(jnp.asarray(x), jnp.asarray(k), gains=rq_a)
+    assert cf.cache_size() == 1
+    got_b = cf(jnp.asarray(x), jnp.asarray(k), gains=rq_b)
+    assert cf.cache_size() == 1, "gain swap must hit the jit cache"
+    got_default = cf(jnp.asarray(x), jnp.asarray(k))     # spec's own gains
+    assert cf.cache_size() == 1
+    np.testing.assert_array_equal(np.asarray(got_a),
+                                  requantize_ref(acc, rq_a))
+    np.testing.assert_array_equal(np.asarray(got_b),
+                                  requantize_ref(acc, rq_b))
+    np.testing.assert_array_equal(np.asarray(got_default),
+                                  requantize_ref(acc, rq_a.gain_free()))
+
+
+def test_spec_changes_compile_fresh(rng):
+    """form/border/dtype/execution are structure: each combination owns a
+    fresh executable (and the compile cache hands back the SAME pipeline
+    for the same combination — the wrappers rely on that)."""
+    x = jnp.asarray(_frame(rng, np.float32))
+    base = Filter2D(window=5)
+    cf = base.compile(x, "pallas", strip_h=8, tile_w=128)
+    assert base.compile(x, "pallas", strip_h=8, tile_w=128) is cf
+    cf(x, jnp.asarray(filters.gaussian(5)))
+    assert cf.cache_size() == 1
+    variants = [
+        base.compile(x, "core"),
+        Filter2D(window=5, form="tree").compile(x, "pallas", strip_h=8,
+                                                tile_w=128),
+        Filter2D(window=5, border=BorderSpec("wrap")).compile(
+            x, "pallas", strip_h=8, tile_w=128),
+        Filter2D(window=5, dtype="int8").compile(
+            jnp.asarray(_frame(rng, np.int8)), "pallas", strip_h=8,
+            tile_w=128),
+    ]
+    for other in variants:
+        assert other is not cf
+        assert other.cache_size() == 0, "a spec change must start cold"
+    assert cf.cache_size() == 1          # ...without disturbing the first
+
+
+# ---------------------------------------------------------------------------
+# execution='auto' selection + derived geometry accounting
+# ---------------------------------------------------------------------------
+
+
+def test_auto_selects_sharded_with_mesh(rng):
+    spec = Filter2D(window=5)
+    cf = spec.compile((4, 64, 40, 1), "auto", mesh=_mesh1())
+    assert cf.execution == "sharded"
+
+
+def test_auto_selects_streaming_over_budget():
+    """The acceptance rule: when the frame-resident working set exceeds
+    the vmem_budget, auto compiles the row-buffer streaming pipeline —
+    with a budget-derived strip height the scan accepts."""
+    spec = Filter2D(window=5)
+    budget = 256 * 1024
+    shape = (2048, 2048)
+    resident = stream_vmem_working_set(2048, 2048, 5, 4)
+    assert resident > budget
+    cf = spec.compile(shape, "auto", vmem_budget=budget)
+    assert cf.execution == "streaming"
+    assert 2048 % cf.strip_h == 0 and cf.strip_h >= 4
+    assert cf.resident_vmem_bytes == resident
+
+
+def test_auto_selects_pixel_cache_within_budget():
+    spec = Filter2D(window=5)
+    cf = spec.compile((128, 256), "auto")
+    assert cf.resident_vmem_bytes <= DEFAULT_VMEM_BUDGET
+    assert cf.execution == "pallas" and cf.regime == "small"
+
+
+def test_auto_falls_back_to_pallas_stream_for_banks():
+    """Shapes the strip scan cannot take (banks, separable) stream through
+    the Pallas row-buffer regime instead."""
+    spec = Filter2D(window=5, num_filters=4)
+    cf = spec.compile((2048, 2048), "auto", vmem_budget=256 * 1024)
+    assert cf.execution == "pallas" and cf.regime == "stream"
+    sspec = Filter2D(window=5, separable=True)
+    cfs = sspec.compile((2048, 2048), "auto", vmem_budget=256 * 1024)
+    assert cfs.execution == "pallas" and cfs.regime == "stream"
+
+
+@pytest.mark.parametrize("budget", [256 * 1024, 2 ** 20,
+                                    DEFAULT_VMEM_BUDGET])
+def test_derived_geometry_keeps_bench_gate_budgets(budget):
+    """Every auto-derived strip/tile choice keeps the static HBM
+    accounting inside the existing bench gates: the int8->int8 round trip
+    stays <= 2.2 bytes/pixel and read amplification stays lean, for
+    budgets spanning 32x."""
+    rq = RequantSpec(multiplier=3, shift=9, dtype="int8")
+    spec = Filter2D(window=5, dtype="int8", requant=rq)
+    cf = spec.compile((2160, 3840), "pallas", vmem_budget=budget)
+    assert cf.vmem_working_set() <= budget
+    assert cf.hbm_bytes_per_pixel() <= 2.2      # the bench-gate pin
+    fspec = Filter2D(window=5)
+    cff = fspec.compile((2160, 3840), "pallas", vmem_budget=budget)
+    assert cff.vmem_working_set() <= budget
+    # the planner's hard floor (strip >= 8, tile >= 128) bounds the read
+    # amplification at (1 + 2r/8)(1 + 2r/128) even for starved budgets
+    r = 2
+    amp_floor = (1 + 2 * r / 8) * (1 + 2 * r / 128)
+    for pipe in (cf, cff):
+        assert halo.read_amplification(pipe.plan) <= amp_floor
+    assert cff.hbm_bytes_per_pixel() <= 4.0 * amp_floor + 4.0
+    if budget >= DEFAULT_VMEM_BUDGET:   # a sane budget is also *lean*
+        assert halo.read_amplification(cff.plan) <= 1.05
+        assert cf.hbm_bytes_per_pixel() <= 2.05
+
+
+def test_derive_strip_tile_narrow_dtypes_deepen_strips():
+    """int8 scratch and a requantised output tile free VMEM; the derived
+    geometry spends it on deeper strips (less row-overlap re-reading) —
+    the ROADMAP's autotuning point, now a property of the planner."""
+    budget = 2 ** 20
+    s_f32, t_f32 = halo.derive_strip_tile(2160, 3840, 5, dtype=np.float32,
+                                          vmem_budget=budget)
+    s_i8, t_i8 = halo.derive_strip_tile(
+        2160, 3840, 5, dtype=np.int8, vmem_budget=budget,
+        requant=RequantSpec(multiplier=1, shift=8, dtype="int8"))
+    assert (s_i8, t_i8) >= (s_f32, t_f32)
+    assert s_i8 >= 4 * s_f32 or t_i8 > t_f32
+    # and both stay inside the budget they were derived from
+    for s, t, dt, rq in ((s_f32, t_f32, np.float32, None),
+                        (s_i8, t_i8, np.int8,
+                         RequantSpec(multiplier=1, shift=8, dtype="int8"))):
+        plan = halo.make_plan(2160, 3840, 5, BorderSpec("mirror"), s, t,
+                              dtype=dt, requant=rq)
+        assert plan_vmem_working_set(plan) <= budget
+
+
+def test_auto_streaming_executes_correctly(rng):
+    """The auto-compiled streaming pipeline doesn't just get selected —
+    it runs, and matches the oracle."""
+    x = jnp.asarray(rng.standard_normal((64, 48)).astype(np.float32))
+    k = jnp.asarray(filters.gaussian(5))
+    budget = 24 * 1024                   # force the row-buffer decision
+    spec = Filter2D(window=5)
+    cf = spec.compile(x, "auto", vmem_budget=budget)
+    assert cf.execution == "streaming"
+    np.testing.assert_allclose(np.asarray(cf(x, k)),
+                               np.asarray(filter2d(x, k)),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# Spec/call validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown form"):
+        Filter2D(window=5, form="banana")
+    with pytest.raises(ValueError, match="single-filter"):
+        Filter2D(window=5, separable=True, num_filters=2)
+    with pytest.raises(ValueError, match="storage contract"):
+        Filter2D(window=5, dtype="int32")
+    with pytest.raises(ValueError):      # requant needs a fixed-point dtype
+        Filter2D(window=5, dtype="float32",
+                 requant=RequantSpec(multiplier=1, shift=0))
+    # policy strings normalise through BorderSpec
+    assert Filter2D(window=3, border="zero").border == BorderSpec("zero")
+
+
+def test_call_validation(rng):
+    x = jnp.asarray(_frame(rng, np.float32))
+    spec = Filter2D(window=5)
+    cf = spec.compile(x, "core")
+    with pytest.raises(ValueError, match="frame shape"):
+        cf(jnp.zeros((8, 8), jnp.float32), jnp.asarray(filters.gaussian(5)))
+    with pytest.raises(ValueError, match="coefficients of shape"):
+        cf(x, jnp.asarray(filters.gaussian(3)))
+    with pytest.raises(ValueError, match="no.*requant"):
+        cf(x, jnp.asarray(filters.gaussian(5)), gains=(1, 0))
+    with pytest.raises(ValueError, match="dtype"):
+        spec.compile(jnp.zeros((4, 4), jnp.int8), "core")
+    with pytest.raises(ValueError, match="needs a mesh"):
+        spec.compile(x, "sharded")
+    with pytest.raises(ValueError, match="single filters"):
+        Filter2D(window=5, num_filters=2).compile(x, "xla")
+    rq = RequantSpec(multiplier=1, shift=4, dtype="int8")
+    cfi = Filter2D(window=5, dtype="int8", requant=rq).compile(
+        (H, W), "core")
+    with pytest.raises(ValueError, match="disagrees with the compiled"):
+        cfi(jnp.zeros((H, W), jnp.int8), jnp.ones((5, 5), jnp.int32),
+            gains=RequantSpec(multiplier=1, shift=4, dtype="int16"))

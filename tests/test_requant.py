@@ -329,3 +329,80 @@ def test_vmem_working_set_shrinks_with_requant_output():
     narrow = stream_vmem_working_set(128, 512, 5, 1, acc_dtype_bytes=4,
                                      out_dtype_bytes=1)
     assert wide - narrow == 128 * 512 * 3
+
+
+# -- unity-gain calibration (the turnkey epilogue helper) -------------------
+
+
+@pytest.mark.parametrize("dtype", ["int8", "uint8", "int16"])
+@pytest.mark.parametrize("w", [3, 5, 7])
+def test_unity_gain_round_trip(dtype, w, rng):
+    """A flat frame through a box filter with the derived scaler comes
+    back at its own level (the filter's DC gain divided back out, ±1 LSB
+    of rounding) — bit-exact through requantize_ref, and the headroom
+    contract the reference asserts holds at the all-max accumulator."""
+    k = np.ones((w, w), np.int32)
+    rq = RequantSpec.unity_gain(k, dtype)
+    info = np.iinfo(np.dtype(dtype))
+    for v in (0, 1, 37, info.max // 2, info.max):
+        acc = np.full((4, 4), v * w * w, np.int32)    # flat-frame interior
+        got = requantize_ref(acc, rq)                 # asserts headroom
+        # derivable error bound: |m/2^s - 1/g| <= 0.5/2^s (m = rint(2^s/g))
+        # scaled by the accumulator, plus one rounding LSB
+        tol = int(v * w * w * 0.5 / 2 ** rq.shift) + 1
+        assert abs(int(got[0, 0]) - v) <= tol, (v, got[0, 0], tol)
+    # precision: the quantised gain sits within 1e-4 of 1/sum(k)
+    assert abs(rq.multiplier / 2 ** rq.shift - 1 / (w * w)) < 1e-4
+
+
+def test_unity_gain_negative_and_large_sums(rng):
+    """Negative coefficient sums derive negative multipliers; large sums
+    still find a representable (m, s) pair under the headroom contract."""
+    kn = -3 * np.ones((3, 3), np.int32)
+    rq = RequantSpec.unity_gain(kn, "int8")
+    assert rq.multiplier < 0
+    acc = np.full((2, 2), 9 * -3 * 100, np.int32)     # flat frame of 100
+    np.testing.assert_array_equal(requantize_ref(acc, rq),
+                                  np.full((2, 2), 100, np.int8))
+    big = np.full((7, 7), 80, np.int32)               # sum 3920, int16 in
+    rq16 = RequantSpec.unity_gain(big, "int16")
+    x = np.full((2, 2), 1000 * 3920, np.int32)
+    got = requantize_ref(x, rq16)
+    # wide-gain filters trade precision for headroom: still within the
+    # derivable |m/2^s - 1/g| <= 0.5/2^s bound scaled by the accumulator
+    tol = int(1000 * 3920 * 0.5 / 2 ** rq16.shift) + 1
+    assert abs(int(got[0, 0]) - 1000) <= tol, (got[0, 0], tol)
+
+
+def test_unity_gain_per_bank_lane(rng):
+    """The [N, w, w] form derives one scaler per coefficient-file lane —
+    each lane of a mixed-gain bank lands at unity independently, through
+    the real bank datapath (core AND pallas, traced per-filter gains)."""
+    bank = np.stack([np.ones((3, 3), np.int32),
+                     2 * np.ones((3, 3), np.int32),
+                     4 * np.ones((3, 3), np.int32)])
+    rq = RequantSpec.unity_gain(bank, "int8", frame_dtype="int8")
+    assert rq.num_filters == 3
+    x = jnp.asarray(np.full((8, 130), 11, np.int8))
+    got = filter_bank(x, jnp.asarray(bank), border=BorderSpec("mirror"),
+                      requant=rq)
+    got_p = filter_bank_pallas(x, jnp.asarray(bank),
+                               border=BorderSpec("mirror"), strip_h=8,
+                               tile_w=128, requant=rq)
+    for lane in range(3):
+        np.testing.assert_array_equal(np.asarray(got[..., lane]),
+                                      np.full((8, 130), 11, np.int8))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got_p))
+
+
+def test_unity_gain_validation():
+    with pytest.raises(ValueError, match="integer"):
+        RequantSpec.unity_gain(np.ones((3, 3), np.float32), "int8")
+    with pytest.raises(ValueError, match="zero coefficient sum"):
+        RequantSpec.unity_gain(np.asarray(
+            [[1, 0, -1], [0, 0, 0], [0, 0, 0]], np.int32), "int8")
+    with pytest.raises(ValueError, match=r"\[w, w\] or \[N, w, w\]"):
+        RequantSpec.unity_gain(np.ones(3, np.int32), "int8")
+    with pytest.raises(ValueError, match="integer storage"):
+        RequantSpec.unity_gain(np.ones((3, 3), np.int32), "int8",
+                               frame_dtype="float32")

@@ -142,6 +142,58 @@ def test_filter2d_small_regime_lowers():
         FRAME, K5)
 
 
+# -- the plan-and-execute front door -----------------------------------------
+# CompiledFilter._fn is the one jitted executable a served pipeline calls;
+# these lanes prove the float, fixed-point and requantised-int pipelines all
+# make it through Mosaic (the same jax.export dry run as the kernels above).
+
+
+def _pipeline_lowers(spec, frame_dtype, coeff_sds, with_gains=False):
+    from repro.core.pipeline import Filter2D  # noqa: F401 (doc pointer)
+    cf = spec.compile(jax.ShapeDtypeStruct((128, 256), frame_dtype),
+                      "pallas", strip_h=64, tile_w=128, interpret=False)
+    args = [_sds((128, 256), frame_dtype), coeff_sds]
+    if with_gains:
+        args.append(_sds((spec.num_filters, 2), jnp.int32))
+    try:
+        exp = jax_export.export(cf._fn, platforms=("tpu",))(*args)
+    except Exception as e:  # noqa: BLE001 - any failure = lowering break
+        pytest.fail(f"CompiledFilter lowering failed: "
+                    f"{type(e).__name__}: {e}")
+    assert "tpu_custom_call" in exp.mlir_module()
+
+
+def test_compiled_filter_float_lowers():
+    from repro.core.pipeline import Filter2D
+    _pipeline_lowers(Filter2D(window=5), jnp.float32,
+                     _sds((5, 5), jnp.float32))
+
+
+def test_compiled_filter_fixed_point_lowers():
+    from repro.core.border_spec import BorderSpec as BS
+    from repro.core.pipeline import Filter2D
+    _pipeline_lowers(Filter2D(window=5, border=BS("wrap"), dtype="int8"),
+                     jnp.int8, _sds((5, 5), jnp.int32))
+
+
+def test_compiled_filter_requant_lowers():
+    """The served requantised pipeline: traced [N, 2] gains operand, fused
+    scale-round-saturate epilogue, int8 store — through Mosaic."""
+    from repro.core.pipeline import Filter2D
+    rq = RequantSpec(multiplier=3, shift=7, rounding="nearest_even",
+                     dtype="int8")
+    _pipeline_lowers(Filter2D(window=5, dtype="int8", requant=rq),
+                     jnp.int8, _sds((5, 5), jnp.int32), with_gains=True)
+
+
+def test_compiled_filter_bank_requant_lowers():
+    from repro.core.pipeline import Filter2D
+    rq = RequantSpec(multiplier=(1, -2, 3), shift=(4, 5, 6), dtype="int8")
+    _pipeline_lowers(
+        Filter2D(window=5, num_filters=3, dtype="int8", requant=rq),
+        jnp.int8, _sds((3, 5, 5), jnp.int32), with_gains=True)
+
+
 def test_dwconv1d_lowers():
     _assert_lowers(
         functools.partial(dwconv1d_pallas, chunk=64, interpret=False),
