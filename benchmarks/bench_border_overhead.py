@@ -33,6 +33,7 @@ from repro.kernels.filter2d import (filter2d_pallas, hbm_bytes_per_pixel,
                                     hbm_write_bytes_per_pixel, make_plan,
                                     read_amplification,
                                     read_bytes_per_pixel)
+from repro.kernels.filter2d.kernel import plan_banks
 
 H, W = 480, 640
 PH, PW = 128, 256        # pallas interpret-mode frame (kept CI-small)
@@ -68,25 +69,33 @@ def core_rows():
     return out
 
 
-def _plan_metrics(plan) -> str:
+def _plan_metrics(plan, overlap=True, num_filters=1) -> str:
     """The analytic byte triple every pallas_halo row reports (and the CI
-    gate diffs): read side, write side, round trip — all from the plan."""
+    gate diffs): read side, write side, round trip — all from the plan.
+    The ``banks`` keys stamp the kernel generation on the row: rows timed
+    by the double-buffered engine are not comparable to serial-era
+    baselines, and the gate re-seeds on the unseen keys instead of
+    diffing across geometries (see benchmarks/compare.py)."""
+    eb, ob = plan_banks(plan, num_filters=num_filters, overlap=overlap)
     return (f"hbm_bytes_per_pixel={hbm_bytes_per_pixel(plan):.2f};"
             f"hbm_read_bytes_per_pixel={read_bytes_per_pixel(plan):.3f};"
             f"hbm_write_bytes_per_pixel={hbm_write_bytes_per_pixel(plan):.2f};"
-            f"read_amplification={read_amplification(plan):.3f}")
+            f"read_amplification={read_amplification(plan):.3f};"
+            f"banks={eb};out_banks={ob}")
 
 
-def _halo_row(name, x, k, spec, strip_h, tile_w, requant=None):
+def _halo_row(name, x, k, spec, strip_h, tile_w, requant=None,
+              overlap=True):
     fn = lambda a, b: filter2d_pallas(a, b, form="direct", border=spec,
                                       regime="stream", strip_h=strip_h,
-                                      tile_w=tile_w, requant=requant)
+                                      tile_w=tile_w, requant=requant,
+                                      overlap=overlap)
     us = time_call(fn, x, k)
     plan = make_plan(PH, PW, k.shape[-1], spec, strip_h, tile_w,
                      dtype=x.dtype, requant=requant)
     return row(name, us,
                f"pixels_per_s={PH * PW / (us * 1e-6):.3e};"
-               + _plan_metrics(plan))
+               + _plan_metrics(plan, overlap=overlap))
 
 
 def pallas_halo_rows():
@@ -112,6 +121,13 @@ def pallas_halo_rows():
                 f"pallas_halo/{form}/{pol}", us,
                 f"pixels_per_s={PH * PW / (us * 1e-6):.3e};"
                 + _plan_metrics(plan)))
+    # the serial reference path, kept as its own rows: the double-buffered
+    # rows above must stay bit-exact with these (tests) while the overlap
+    # engine's step cost is tracked separately by the gate
+    for pol in ("neglect",) + SAME_SIZE_POLICIES:
+        out.append(_halo_row(f"pallas_halo/direct/{pol}/serial", x, k,
+                             BorderSpec(pol), strip_h, tile_w,
+                             overlap=False))
     return out
 
 
@@ -147,6 +163,12 @@ def fixed_point_rows():
                 # the acceptance pin: narrow in BOTH directions
                 assert hbm_bytes_per_pixel(plan) <= INT8_ROUND_TRIP_BUDGET, (
                     pol, hbm_bytes_per_pixel(plan))
+        # serial reference for the requant epilogue (mirror lane only —
+        # the overlap/serial delta is form-independent)
+        out.append(_halo_row(
+            f"pallas_halo/direct/mirror/{name}/requant/serial",
+            x, k, BorderSpec("mirror", 3.0), strip_h, tile_w, requant=rq,
+            overlap=False))
     return out
 
 

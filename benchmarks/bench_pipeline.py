@@ -21,6 +21,7 @@ from repro.core import filters
 from repro.core.border_spec import BorderSpec
 from repro.core.pipeline import Filter2D
 from repro.core.requant import RequantSpec
+from repro.kernels.filter2d.kernel import plan_banks
 
 PH, PW = 128, 256        # interpret-mode frame (kept CI-small)
 STREAM_BUDGET = 192 * 1024   # forces the row-buffer decision for PH x PW
@@ -41,6 +42,12 @@ def _auto_row(name, spec, x, coeffs, gains=None, **compile_kw):
                     f";vmem_working_set={cf.vmem_working_set()}")
     if cf.strip_h is not None:
         derived += f";strip_h={cf.strip_h}"
+    if cf.execution == "pallas" and cf.plan is not None:
+        # kernel-generation stamp: the gate re-seeds rather than diff a
+        # double-buffered row against a serial-era baseline
+        eb, ob = plan_banks(cf.plan, num_filters=spec.num_filters,
+                            overlap=cf.overlap)
+        derived += f";banks={eb};out_banks={ob}"
     return cf, row(name, us, derived)
 
 

@@ -28,6 +28,14 @@ locked-in capability):
   * a row present in the newest baseline vanished, or errored in the
     current run (dropped coverage must not read as green).
 
+A current row that carries *descriptor keys the baseline row has never
+seen* (e.g. the ``banks``/overlap-geometry keys a new kernel generation
+stamps on its rows) is **not comparable** to that baseline: its timings
+and byte metrics were produced by a different datapath geometry. Such
+rows re-seed the trajectory with a note — exactly like brand-new rows or
+a missing baseline — instead of failing the gate; the next window
+compares like against like.
+
 Row membership follows the **newest** baseline record only (a row renamed
 two commits ago must not haunt the gate for the rest of the window);
 metric medians are taken across every window record that has the row.
@@ -53,8 +61,22 @@ RATE_KEY = "pixels_per_s"
 # Metrics the window median is taken over (everything the gate compares).
 WINDOWED_KEYS = (RATE_KEY,) + BYTES_KEYS
 
+# Row bookkeeping fields that are never geometry descriptors.
+BOOKKEEPING_KEYS = ("name", "us_per_call", "error")
+
 DEFAULT_WINDOW = 5
 DEFAULT_MAX_RATE_DROP = 0.10
+
+
+def unknown_keys(base_row: dict, cur_row: dict) -> List[str]:
+    """Descriptor keys the current row carries that the (windowed)
+    baseline row has never seen — geometry/config keys a newer kernel
+    generation added (``banks=2``, overlap markers, ...). A non-empty
+    result means the two rows describe *different datapaths*: the gate
+    must re-seed, not diff."""
+    skip = set(WINDOWED_KEYS) | set(BOOKKEEPING_KEYS)
+    return sorted(k for k in cur_row
+                  if k not in skip and k not in base_row)
 
 
 def index_rows(payload: dict) -> Dict[str, dict]:
@@ -131,6 +153,11 @@ def compare(baseline: Union[dict, Sequence[dict]], current: dict, *,
         c = cur_rows.get(name)
         if c is None:
             failures.append(f"{name}: row vanished from the current record")
+            continue
+        unk = unknown_keys(b, c)
+        if unk:
+            notes.append(f"{name}: re-seeds the trajectory — baseline "
+                         f"predates geometry key(s) {', '.join(unk)}")
             continue
         if RATE_KEY in b and RATE_KEY in c:
             floor = b[RATE_KEY] * (1.0 - max_rate_drop)

@@ -115,9 +115,14 @@ def quantize_constant(value: float, dtype) -> float:
 def min_extent(spec: BorderSpec, radius: int) -> int:
     """Smallest frame extent a policy can extend by ``radius``: ``mirror``
     reflects without duplication (needs r+1 rows), ``mirror_dup``/``wrap``
-    source r distinct rows, ``duplicate``/``constant``/``neglect`` any."""
+    source r distinct rows, ``duplicate``/``constant`` any. ``neglect``
+    produces no border at all, so every output needs its full 2r+1-tap
+    window in-frame: extents below that have zero valid outputs and must
+    be rejected at plan time (not deep inside the axis planner)."""
     if radius == 0:
         return 1
+    if spec.policy == "neglect":
+        return 2 * radius + 1
     if spec.policy == "mirror":
         return radius + 1
     if spec.policy in ("mirror_dup", "wrap"):

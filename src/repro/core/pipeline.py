@@ -134,6 +134,7 @@ class Filter2D:
                 strip_h: Optional[int] = None,
                 tile_w: Optional[int] = None,
                 regime: Optional[str] = None,
+                overlap: bool = True,
                 interpret: Optional[bool] = None) -> "CompiledFilter":
         """Plan the pipeline for one frame geometry and executor.
 
@@ -143,16 +144,20 @@ class Filter2D:
         from the static plan accounting (see :class:`CompiledFilter`);
         ``vmem_budget`` (default 8 MiB) bounds the per-step working set
         and is what ``strip_h``/``tile_w`` are derived from when not
-        given. Results are memoised: the same (spec, geometry, knobs)
-        returns the same ``CompiledFilter`` — and therefore the same jit
-        cache — so wrapping entry points stay cheap per call.
+        given. ``overlap`` (Pallas executors; default on) selects the
+        double-buffered LD∥EX∥ST kernel — the planner then budgets the
+        two-bank scratch, so the derived strip/tile geometry shifts —
+        versus the serial reference path. Results are memoised: the same
+        (spec, geometry, knobs) returns the same ``CompiledFilter`` —
+        and therefore the same jit cache — so wrapping entry points stay
+        cheap per call.
         """
         shape = _frame_shape(frame_spec, self.dtype)
         if execution not in EXECUTIONS:
             raise ValueError(f"unknown execution {execution!r}; choose "
                              f"from {EXECUTIONS}")
         return _compiled(self, shape, execution, mesh, axis, vmem_budget,
-                         strip_h, tile_w, regime, interpret)
+                         strip_h, tile_w, regime, bool(overlap), interpret)
 
 
 def _frame_shape(frame_spec, dtype_name: str) -> Tuple[int, ...]:
@@ -178,10 +183,11 @@ def _frame_shape(frame_spec, dtype_name: str) -> Tuple[int, ...]:
 
 @functools.lru_cache(maxsize=256)
 def _compiled(spec, shape, execution, mesh, axis, vmem_budget, strip_h,
-              tile_w, regime, interpret) -> "CompiledFilter":
+              tile_w, regime, overlap, interpret) -> "CompiledFilter":
     return CompiledFilter(spec, shape, execution, mesh=mesh, axis=axis,
                           vmem_budget=vmem_budget, strip_h=strip_h,
-                          tile_w=tile_w, regime=regime, interpret=interpret)
+                          tile_w=tile_w, regime=regime, overlap=overlap,
+                          interpret=interpret)
 
 
 class CompiledFilter:
@@ -217,11 +223,13 @@ class CompiledFilter:
                  strip_h: Optional[int] = None,
                  tile_w: Optional[int] = None,
                  regime: Optional[str] = None,
+                 overlap: bool = True,
                  interpret: Optional[bool] = None):
         self.spec = spec
         self.frame_shape = frame_shape
         self.mesh = mesh
         self.axis = axis
+        self.overlap = bool(overlap)
         self.vmem_budget = (DEFAULT_VMEM_BUDGET if vmem_budget is None
                             else int(vmem_budget))
         self.interpret = (ops._default_interpret() if interpret is None
@@ -242,12 +250,15 @@ class CompiledFilter:
         # The output tile is lane-padded exactly as the small-regime plan
         # lays it out, so this estimate equals plan_vmem_working_set of
         # the plan 'small' would build (no under-budget mis-selection on
-        # narrow unaligned frames).
+        # narrow unaligned frames). A 1-strip plan never double-banks the
+        # halo scratch (nothing to prefetch), but a bank grid (N > 1)
+        # still double-banks the output tile for the async store.
         wo_pad = Wo + (-Wo) % halo.LANE
         self.resident_vmem_bytes = K.stream_vmem_working_set(
             Ho, wo_pad, w, db, separable=spec.separable,
             num_filters=spec.num_filters, acc_dtype_bytes=acc_b,
-            out_dtype_bytes=out_b)
+            out_dtype_bytes=out_b,
+            out_banks=2 if (self.overlap and spec.num_filters > 1) else 1)
 
         if execution == "auto":
             if mesh is not None:
@@ -292,7 +303,7 @@ class CompiledFilter:
                     vmem_budget=self.vmem_budget,
                     num_filters=spec.num_filters, separable=spec.separable,
                     requant=spec.requant, same_size=same,
-                    strip_h=strip_h, tile_w=tile_w)
+                    strip_h=strip_h, tile_w=tile_w, overlap=self.overlap)
             elif self.regime == "small":
                 strip_h = Ho if strip_h is None else strip_h
                 tile_w = Wo if tile_w is None else tile_w
@@ -425,6 +436,7 @@ class CompiledFilter:
         n = spec.num_filters
         regime, S, Tw = self.regime, self.strip_h, self.tile_w
         interpret = self.interpret
+        overlap = self.overlap
 
         def impl(frame, co, q=None):
             planes, tag = ops._fold_planes(frame)
@@ -438,7 +450,7 @@ class CompiledFilter:
             y = ops._filter2d_pallas_planes(
                 planes, co_k, q, form=form, border=border, regime=regime,
                 strip_h=S, tile_w=Tw, interpret=interpret,
-                requant=rq_static)
+                requant=rq_static, overlap=overlap)
             return ops._unfold(y, tag, keep_bank=n > 1)
         return impl
 
@@ -515,12 +527,14 @@ class CompiledFilter:
         return self._fn._cache_size()
 
     def vmem_working_set(self) -> Optional[int]:
-        """Per-step VMEM bytes of the planned geometry (from the plan)."""
+        """Per-step VMEM bytes of the planned geometry (from the plan) —
+        both scratch banks counted when the double-buffered path runs."""
         if self.plan is None:
             return None
-        return K.plan_vmem_working_set(self.plan,
-                                       num_filters=self.spec.num_filters,
-                                       separable=self.spec.separable)
+        return K.plan_vmem_working_set(
+            self.plan, num_filters=self.spec.num_filters,
+            separable=self.spec.separable,
+            overlap=self.overlap if self.execution == "pallas" else False)
 
     def hbm_bytes_per_pixel(self) -> Optional[float]:
         """Static HBM round-trip bytes/pixel of the planned geometry."""
@@ -532,7 +546,7 @@ class CompiledFilter:
         geo = ""
         if self.execution == "pallas":
             geo = (f", regime={self.regime!r}, strip_h={self.strip_h}, "
-                   f"tile_w={self.tile_w}")
+                   f"tile_w={self.tile_w}, overlap={self.overlap}")
         elif self.execution == "streaming":
             geo = f", strip_h={self.strip_h}"
         return (f"CompiledFilter({self.spec!r}, frame={self.frame_shape}, "

@@ -28,9 +28,16 @@ Python-int offsets/sizes, so the kernel body (``fill_ext``) emits a fixed,
 small set of ``pl.when``-guarded DMAs and mux copies — the hardware mux,
 traced. Only interior block offsets are dynamic (a grid-index multiply).
 
-On real hardware the serialized start/wait pairs below would be batched
-and overlapped with compute; interpret-mode correctness and the Mosaic
-lowering share this one code path.
+The fill is two-phase so the kernel can double-buffer it: ``start_fill``
+issues every DMA for a (strip, tile) window into one scratch *bank* and
+returns with the copies in flight; ``wait_fill`` (same arguments, same
+``pl.when`` structure, so the wait-side descriptors pair one-to-one with
+the started copies) lands them and then runs the in-VMEM policy mux on
+that bank. The kernel prefetches strip ``s+1`` into the alternate bank
+while reducing strip ``s`` — the LD/EX overlap of an FPGA line buffer,
+where the next w−1 rows shift in while the current window is consumed.
+``fill_ext`` (phase ``'both'``) is the serial reference path: start+wait
+back-to-back, one bank — bit-identical output, no overlap.
 """
 from __future__ import annotations
 
@@ -224,25 +231,37 @@ def derive_strip_tile(H: int, W: int, w: int, *, dtype=np.float32,
                       requant: Optional[RequantSpec] = None,
                       same_size: bool = True,
                       strip_h: Optional[int] = None,
-                      tile_w: Optional[int] = None) -> Tuple[int, int]:
+                      tile_w: Optional[int] = None,
+                      overlap: bool = True) -> Tuple[int, int]:
     """Pick ``(strip_h, tile_w)`` for a stream plan from a VMEM budget.
 
     The autotuning rule the ROADMAP asked for, from static accounting only
-    (the same terms as ``kernel.stream_vmem_working_set``): prefer the
-    widest lane-aligned tile that still leaves a usefully deep strip —
-    full-width tiles pay no column-halo re-reads, so read amplification
-    stays ≈ 1 + 2r/strip — then spend every remaining budget byte on strip
-    depth (narrow storage dtypes and a requantised output tile both free
-    VMEM, which lands here as deeper strips). Halving the tile is only
-    worth it when the budget cannot hold ``max(2r, 8)`` rows at the
-    current width. Degenerate budgets clamp to the minimum viable strip
-    (the plan then overruns the budget rather than breaking the
-    ``strip >= 2r`` invariant multi-strip plans require).
+    (the same terms as ``kernel.stream_vmem_working_set``). With
+    ``overlap`` (the default — the double-buffered kernel) the scratch and
+    the output tile are both banked ×2, so each bank sees half the
+    effective budget; the selection co-models that doubling rather than
+    halving the budget after the fact.
 
-    A caller-supplied ``strip_h``/``tile_w`` is honoured verbatim and only
-    the *free* knob is derived against it: a fixed tile gets the deepest
-    strip the budget holds at that width; a fixed strip gets the widest
-    tile that still fits that many rows.
+    Both knobs free: every lane-aligned tile width from the full output
+    width down to one lane is a candidate; each gets the deepest strip the
+    (banked) budget holds at that width, and the candidate minimising the
+    read amplification (1 + 2r/strip)(1 + 2r/tile) wins — with a 2% slack
+    in favour of *wider* tiles, which amortise the row-mux work and DMA
+    descriptors over longer rows at equal traffic. Narrow storage dtypes
+    and a requantised output tile free bank bytes, which lands here as
+    deeper strips (or full-width tiles at the same depth).
+
+    A caller-supplied ``strip_h``/``tile_w`` is honoured verbatim (clamped
+    to the frame) and only the *free* knob is derived against it: a fixed
+    tile gets the deepest strip the budget holds at that width; a fixed
+    strip gets the widest tile that still fits that many rows.
+
+    Edge cases clamp instead of overderiving: frames narrower than one
+    lane tile or shallower than ``max(2r, 8)`` collapse to the degenerate
+    1-strip/1-tile plan (``strip_h <= Ho``, ``tile_w <= wo_pad`` always),
+    and starved budgets clamp to the minimum viable strip — the plan then
+    overruns the budget rather than breaking the ``strip >= 2r`` invariant
+    multi-strip plans require.
     """
     r = (w - 1) // 2
     Ho = H if same_size else max(H - 2 * r, 1)
@@ -251,33 +270,51 @@ def derive_strip_tile(H: int, W: int, w: int, *, dtype=np.float32,
     coeff = num_filters * (2 * w if separable else w * w) * acc_b
     s_min = max(2 * r, 8)
     wo_pad = Wo + (-Wo) % LANE
+    banks = 2 if overlap else 1
 
     def max_strip(tile: int) -> int:
         ew = tile + 2 * r
         ew += (-ew) % LANE
-        per_row = ew * db + tile * out_b
-        avail = vmem_budget - coeff - 2 * r * ew * db
+        per_row = banks * (ew * db + tile * out_b)
+        avail = vmem_budget - coeff - banks * 2 * r * ew * db
         return int(avail // per_row) if avail > 0 else 0
+
+    def clamp_strip(s: int) -> int:
+        s = max(s, s_min)
+        if s > 8:
+            # sublane-align deep strips, never dropping below the s_min
+            # floor (multi-strip plans require strip >= 2r)
+            s = max(s - s % 8, s_min)
+        return max(min(s, Ho), 1)
 
     if tile_w is not None:
         tile = max(min(tile_w + (-tile_w) % LANE, wo_pad), LANE)
-        s = max_strip(tile)
-    else:
-        want = s_min if strip_h is None else max(int(strip_h), s_min)
-        tile = wo_pad
-        while True:
-            s = max_strip(tile)
-            if s >= want or tile <= LANE:
-                break
-            tile = max(LANE, tile // 2 - (tile // 2) % LANE)
+        if strip_h is not None:
+            return max(min(int(strip_h), Ho), 1), int(tile)
+        return clamp_strip(max_strip(tile)), int(tile)
+
     if strip_h is not None:
+        # fixed strip: widest tile whose banked budget holds that many rows
+        want = max(int(strip_h), s_min)
+        tile = wo_pad
+        while max_strip(tile) < want and tile > LANE:
+            tile = max(LANE, tile // 2 - (tile // 2) % LANE)
         return max(min(int(strip_h), Ho), 1), int(tile)
-    s = max(s, s_min)
-    if s > 8:
-        # sublane-align deep strips, never dropping below the s_min floor
-        # (multi-strip plans require strip >= 2r)
-        s = max(s - s % 8, s_min)
-    return max(min(s, Ho), 1), int(tile)
+
+    cands = []                            # widest tile first
+    tile = wo_pad
+    while True:
+        s = clamp_strip(max_strip(tile))
+        amp = (1 + 2 * r / s) * (1 + 2 * r / tile)
+        cands.append((tile, s, amp))
+        if tile <= LANE:
+            break
+        tile = max(LANE, tile // 2 - (tile // 2) % LANE)
+    best = min(a for _, _, a in cands)
+    for tile, s, amp in cands:
+        if amp <= best * 1.02:            # widest within 2% of optimal
+            return s, int(tile)
+    raise AssertionError("unreachable: best candidate always qualifies")
 
 
 def read_amplification(plan: HaloPlan) -> float:
@@ -337,10 +374,17 @@ def hbm_bytes_per_pixel(plan: HaloPlan,
 # ---------------------------------------------------------------------------
 
 
-def _copy(src, dst, sem) -> None:
+def _copy(src, dst, sem, phase: str = "both") -> None:
+    """One DMA in the requested phase. ``'start'`` issues the copy and
+    returns with it in flight; ``'wait'`` reconstructs the byte-identical
+    descriptor and blocks on its semaphore; ``'both'`` is the serial
+    start+wait pair. Start and wait sides MUST be emitted under identical
+    conditions so every started copy is waited exactly once."""
     cp = pltpu.make_async_copy(src, dst, sem)
-    cp.start()
-    cp.wait()
+    if phase in ("both", "start"):
+        cp.start()
+    if phase in ("both", "wait"):
+        cp.wait()
 
 
 def _variants(ax: AxisPlan):
@@ -425,7 +469,8 @@ def _mux_axis(ext_ref, c: AxisClass, plan: HaloPlan, axis: int) -> None:
              _mux_src_tail(plan.policy, c.dst0, c.size, k))
 
 
-def fill_ext(frame_ref, ext_ref, sem, i, j, plan: HaloPlan) -> None:
+def fill_ext(frame_ref, ext_ref, sem, i, j, plan: HaloPlan,
+             phase: str = "both") -> None:
     """Fill the (eh, ew) VMEM scratch for grid step (strip ``i``, tile
     ``j``) from ``frame_ref``, the un-tiled [H, W] plane in ANY/HBM space.
 
@@ -433,6 +478,13 @@ def fill_ext(frame_ref, ext_ref, sem, i, j, plan: HaloPlan) -> None:
     ``wrap`` — the opposite-edge and torus-corner DMAs; then, for the mux
     policies, the static in-VMEM edge fills. All sizes are Python ints from
     the plan; only interior offsets are traced.
+
+    ``phase='start'`` issues the DMAs (in flight on return, no mux);
+    ``phase='wait'`` lands them and runs the policy mux; ``'both'`` is
+    the serial reference. The ``pl.when`` guard structure depends only on
+    (i, j, plan), so a ``'start'``/``'wait'`` pair with the same arguments
+    emits byte-identical descriptor sets — every started DMA is waited
+    exactly once, whichever scratch bank ``ext_ref`` views.
     """
     wrap = plan.policy == "wrap"
     H, W = plan.rows.extent, plan.cols.extent
@@ -444,7 +496,7 @@ def fill_ext(frame_ref, ext_ref, sem, i, j, plan: HaloPlan) -> None:
                 ro, co = rsrc(i), csrc(j)
                 _copy(frame_ref.at[pl.ds(ro, rsize), pl.ds(co, csize)],
                       ext_ref.at[pl.ds(rdst0, rsize), pl.ds(cdst0, csize)],
-                      sem)
+                      sem, phase)
                 if not wrap:
                     return
                 # prologue DMAs: opposite-edge rows/cols + torus corners
@@ -459,20 +511,20 @@ def fill_ext(frame_ref, ext_ref, sem, i, j, plan: HaloPlan) -> None:
                         _copy(frame_ref.at[pl.ds(fs, cnt),
                                            pl.ds(co, csize)],
                               ext_ref.at[pl.ds(ed, cnt),
-                                         pl.ds(cdst0, csize)], sem)
+                                         pl.ds(cdst0, csize)], sem, phase)
                 for cnt, fs, ed in c_edges:
                     if cnt:
                         _copy(frame_ref.at[pl.ds(ro, rsize),
                                            pl.ds(fs, cnt)],
                               ext_ref.at[pl.ds(rdst0, rsize),
-                                         pl.ds(ed, cnt)], sem)
+                                         pl.ds(ed, cnt)], sem, phase)
                 for rcnt, rfs, red in r_edges:
                     for ccnt, cfs, ced in c_edges:
                         if rcnt and ccnt:
                             _copy(frame_ref.at[pl.ds(rfs, rcnt),
                                                pl.ds(cfs, ccnt)],
                                   ext_ref.at[pl.ds(red, rcnt),
-                                             pl.ds(ced, ccnt)], sem)
+                                             pl.ds(ced, ccnt)], sem, phase)
 
             conds = [c for c in (rcond(i) if rcond else None,
                                  ccond(j) if ccond else None)
@@ -482,7 +534,7 @@ def fill_ext(frame_ref, ext_ref, sem, i, j, plan: HaloPlan) -> None:
             else:
                 pl.when(functools.reduce(jnp.logical_and, conds))(emit)
 
-    if wrap:
+    if phase == "start" or wrap:
         return
     for c in plan.rows.specials:
         if c.head or c.tail:
@@ -498,3 +550,20 @@ def fill_ext(frame_ref, ext_ref, sem, i, j, plan: HaloPlan) -> None:
                 fn()
             else:
                 pl.when(j == c.index)(fn)
+
+
+def start_fill(frame_ref, bank_ref, sem, i, j, plan: HaloPlan) -> None:
+    """Issue every fill DMA for (strip i, tile j) into scratch bank
+    ``bank_ref`` (a per-bank view, e.g. ``ext_ref.at[b]``) and return with
+    the copies in flight — including wrap's opposite-edge and torus-corner
+    prologue fetches, which are parametric in ``i``/``j`` and so prefetch
+    correctly for a *future* strip. ``sem`` is that bank's semaphore."""
+    fill_ext(frame_ref, bank_ref, sem, i, j, plan, phase="start")
+
+
+def wait_fill(frame_ref, bank_ref, sem, i, j, plan: HaloPlan) -> None:
+    """Land the DMAs ``start_fill`` issued for the same (bank, i, j) and
+    realise the border policy mux on that bank. Must mirror the start
+    call's arguments exactly — the wait descriptors are reconstructed from
+    them and pair with the in-flight copies by byte count."""
+    fill_ext(frame_ref, bank_ref, sem, i, j, plan, phase="wait")

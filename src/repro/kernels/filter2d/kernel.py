@@ -34,8 +34,17 @@ kernel grid** (no outer ``vmap``): input planes are [M, H, W], coefficients
 ``parallel`` (megacore-partitionable: each (plane, tile) owns its scratch);
 the strip and filter dims stay ``arbitrary`` — strips so the stream order
 is preserved, filters so the scratch filled at the first filter step is
-reused by the rest of the bank (the coefficient file's read-once property:
-the filter dim is innermost and the fill is ``pl.when(f == 0)``-guarded).
+reused by the rest of the bank (the coefficient file's read-once property;
+the refill guard follows the grid order, so a ``strips_innermost`` grid
+refills every step instead of reading stale scratch).
+
+The stream regime is **double-buffered** by default (``overlap=True``):
+the scratch and the output tile are two-bank, strip s+1's fill DMAs fly
+while strip s is reduced, and each output store is issued async and
+waited two steps later — the LD(s+1) ∥ EX(s) ∥ ST(s−1) pipeline of an
+FPGA scratchpad design, with per-bank DMA semaphores keeping the
+bookkeeping exact. ``overlap=False`` is the serial reference path
+(bit-identical valid-region output; the parity sweep pins it).
 
 The w² reduction supports the paper's four layouts (direct / transposed /
 tree / compress) — see ``core/filter2d`` for the FPGA↔TPU mapping — plus a
@@ -144,15 +153,64 @@ def _reduce_separable(ext, u, v, Ho: int, Wo: int, w: int):
 # ---------------------------------------------------------------------------
 
 
-def _halo_kernel(x_ref, c_ref, *rest, plan: HaloPlan, form: str, w: int):
-    """Grid step (m, j, i, f): fill the scratch with strip i of tile j
-    (in-frame DMA + border mux) at the bank's first filter step, then
-    reduce the taps for filter f.
+GRID_ORDERS = ("filters_innermost", "strips_innermost")
+
+
+def plan_banks(plan: HaloPlan, num_filters: int = 1,
+               overlap: bool = True) -> tuple:
+    """(ext_banks, out_banks) the kernel allocates for this plan.
+
+    The input scratch is double-banked only when there is a next strip to
+    prefetch (``rows.n > 1``); the output buffer only when there is a
+    later step to pre-wait behind (more than one (strip, filter) step per
+    tile). Single-strip single-filter plans collapse both to 1 bank — the
+    serial working set — so the pixel-cache regime pays nothing for the
+    overlap machinery it cannot use."""
+    if not overlap:
+        return 1, 1
+    ext_banks = 2 if plan.rows.n > 1 else 1
+    out_banks = 2 if plan.rows.n * num_filters > 1 else 1
+    return ext_banks, out_banks
+
+
+def _when(*conds):
+    """``pl.when`` over the non-None conds; immediate call when none."""
+    conds = [c for c in conds if c is not None]
+    if not conds:
+        return lambda fn: fn()
+    return pl.when(functools.reduce(jnp.logical_and, conds))
+
+
+def _halo_kernel(x_ref, c_ref, *rest, plan: HaloPlan, form: str, w: int,
+                 n_filters: int, grid_order: str, overlap: bool,
+                 ext_banks: int, out_banks: int):
+    """One grid step: fill/land the scratch bank for strip i of tile j,
+    reduce the taps for filter f, and store the output tile.
 
     x_ref is the whole un-tiled [M, H, W] plane stack in ANY/HBM space —
     the kernel's own DMA is the only reader, so the stream is read-once
     from HBM (plus the 2r strip overlap). The scratch persists across the
-    innermost (filter) steps: the coefficient-file read-once property.
+    filter steps whenever filters are the innermost grid dim: the
+    coefficient-file read-once property. With ``grid_order=
+    'strips_innermost'`` every step is a fresh strip, so the fill is
+    unconditional — the refill guard FOLLOWS the grid order instead of
+    hard-coding ``f == 0`` against whatever dim happens to be innermost.
+
+    Serial path (``overlap=False``): one scratch bank, start+wait fill,
+    BlockSpec-managed output store — the bit-exact reference.
+
+    Overlap path: two-bank LD ∥ EX ∥ ST software pipeline.
+      LD  — strip i+1's fill DMAs (main window + wrap prologue/corners)
+            are *started* into bank (i+1)%2 before strip i is reduced;
+            strip i's own fill is only *waited* here (it was started one
+            step earlier, or at the i==0 prologue).
+      EX  — the reduction reads bank i%2; the policy mux ran at wait time
+            on that bank only.
+      ST  — the output tile is written to obuf bank t%2 (t the step index
+            within this (m, j) tile) and DMA'd to the ANY-space output
+            asynchronously; the copy is waited two steps later (pre-wait
+            before the bank is rewritten) and the last two are drained at
+            the final step. Steady state: LD(s+1) ∥ EX(s) ∥ ST(s−1).
 
     When the plan carries a requantising epilogue, ``rest`` leads with
     ``q_ref`` — the [N, 2] (multiplier, shift) scaler table in SMEM
@@ -162,23 +220,59 @@ def _halo_kernel(x_ref, c_ref, *rest, plan: HaloPlan, form: str, w: int):
     scale→round→saturate down to the storage dtype before the store.
     """
     if plan.requant is not None:
-        q_ref, o_ref, ext_ref, sem = rest
+        q_ref, o_ref, *scratch = rest
     else:
-        q_ref, (o_ref, ext_ref, sem) = None, rest
+        q_ref = None
+        o_ref, *scratch = rest
     m = pl.program_id(0)
     j = pl.program_id(1)
-    i = pl.program_id(2)
+    if grid_order == "filters_innermost":
+        i, f = pl.program_id(2), pl.program_id(3)
+        n_i = pl.num_programs(2)
+        # the scratch is shared by the whole bank: fill once per strip,
+        # at the first filter step
+        first_fill = (f == 0) if n_filters > 1 else None
+        t = i * n_filters + f
+    else:
+        f, i = pl.program_id(2), pl.program_id(3)
+        n_i = pl.num_programs(3)
+        first_fill = None                 # every step is a fresh strip
+        t = f * n_i + i
+    T = plan.rows.n * n_filters           # steps per (m, j) tile
 
-    @pl.when(pl.program_id(3) == 0)
-    def _fill_scratch():
-        halo.fill_ext(x_ref.at[m], ext_ref, sem, i, j, plan)
+    S, Tw = plan.rows.block, plan.cols.block
+    frame = x_ref.at[m]
+
+    if not overlap:
+        ext_ref, sem = scratch
+        _when(first_fill)(
+            lambda: halo.fill_ext(frame, ext_ref, sem, i, j, plan))
+        ext_bank = ext_ref
+    else:
+        ext_ref, obuf_ref, fill_sem, store_sem = scratch
+        bank = jax.lax.rem(i, ext_banks)
+        nxt = jax.lax.rem(i + 1, ext_banks)
+        # LD prologue: the first strip has no earlier step to prefetch it
+        _when(first_fill, i == 0)(
+            lambda: halo.start_fill(frame, ext_ref.at[bank],
+                                    fill_sem.at[bank], i, j, plan))
+        if ext_banks == 2:
+            # LD: prefetch strip i+1 into the other bank; its DMAs fly
+            # while strip i is muxed and reduced below
+            _when(first_fill, i + 1 < n_i)(
+                lambda: halo.start_fill(frame, ext_ref.at[nxt],
+                                        fill_sem.at[nxt], i + 1, j, plan))
+        # land this strip's DMAs + run the border mux, on its bank only
+        _when(first_fill)(
+            lambda: halo.wait_fill(frame, ext_ref.at[bank],
+                                   fill_sem.at[bank], i, j, plan))
+        ext_bank = ext_ref.at[bank]
 
     # fixed-point: the scratch holds the narrow storage dtype (the DMA'd
     # bytes stay 1-2 per pixel); the widening to the int32 accumulator
     # happens here, on the register-level read feeding the MAC.
     adt = jnp.int32 if plan.requant is not None else o_ref.dtype
-    ext = ext_ref[...].astype(adt)
-    S, Tw = o_ref.shape[-2:]
+    ext = ext_bank[...].astype(adt)
     if form == "separable":
         y = _reduce_separable(ext, c_ref[0, 0], c_ref[0, 1], S, Tw, w)
     else:
@@ -186,16 +280,46 @@ def _halo_kernel(x_ref, c_ref, *rest, plan: HaloPlan, form: str, w: int):
     if plan.requant is not None:
         # the fused epilogue: word growth managed inside the datapath, so
         # the store (and the HBM write behind it) is storage-width again
-        f = pl.program_id(3)
         y = apply_requant(y, q_ref[f, 0], q_ref[f, 1],
                           rounding=plan.requant.rounding,
                           out_dtype=o_ref.dtype)
-    o_ref[0, 0] = y
+
+    if not overlap:
+        o_ref[0, 0] = y
+        return
+
+    # ST: async store through the obuf bank for step t. The wait-side
+    # descriptors are reconstructed with the CURRENT step's slice — every
+    # store moves the same S×Tw×out_dtype bytes, so the semaphore
+    # bookkeeping matches the copy actually in flight on that bank.
+    ob = jax.lax.rem(t, out_banks)
+    dst = o_ref.at[m, f, pl.ds(i * S, S), pl.ds(j * Tw, Tw)]
+    if out_banks == 2:
+        # pre-wait: the copy issued from this bank two steps ago must
+        # have landed before the bank is rewritten
+        _when(t >= 2)(
+            lambda: pltpu.make_async_copy(obuf_ref.at[ob], dst,
+                                          store_sem.at[ob]).wait())
+    obuf_ref[ob] = y
+    pltpu.make_async_copy(obuf_ref.at[ob], dst, store_sem.at[ob]).start()
+
+    # drain: the final step waits the last store on every bank (bank
+    # parities of T-1 and T-2 are static — T is a Python int)
+    last = (T - 1) % out_banks
+    if out_banks == 2 and T >= 2:
+        _when(t == T - 1)(
+            lambda: pltpu.make_async_copy(obuf_ref.at[(T - 2) % 2], dst,
+                                          store_sem.at[(T - 2) % 2]).wait())
+    _when(t == T - 1)(
+        lambda: pltpu.make_async_copy(obuf_ref.at[last], dst,
+                                      store_sem.at[last]).wait())
 
 
 def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
                   q_params: Optional[jax.Array] = None,
-                  form: str = "direct", interpret: bool = True) -> jax.Array:
+                  form: str = "direct", interpret: bool = True,
+                  overlap: bool = True,
+                  grid_order: str = "filters_innermost") -> jax.Array:
     """Streaming 2D filter with in-kernel border management.
 
     planes: [M, H, W] raw (un-tiled, un-extended) frame planes — the only
@@ -209,23 +333,46 @@ def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
     BOTH directions), else int32 for fixed-point storage (exact
     accumulation; the caller requantises), else the frame dtype.
 
-    The grid is (M, n_tiles, n_strips, N): filters innermost so each
-    scratch fill serves the whole bank; planes and column tiles are
-    ``parallel`` (provably independent — megacore-partitionable), strips
-    and filters ``arbitrary`` (stream order; scratch reuse is core-local).
-    VMEM per step: the (S+2r)×(Tw+2r lane-padded) scratch + an S×Tw output
-    block + the coefficient file — the row-buffer bound, independent of
-    both frame height and width.
+    The grid is (M, n_tiles, n_strips, N) (``grid_order=
+    'filters_innermost'``, the default: each scratch fill serves the whole
+    bank) or (M, n_tiles, N, n_strips) (``'strips_innermost'``: the fill
+    guard follows — every step refills, no stale-scratch reads). Planes
+    and column tiles are ``parallel`` (provably independent — megacore-
+    partitionable), the inner two dims ``arbitrary`` (stream order;
+    scratch reuse is core-local).
+
+    ``overlap=True`` (default) runs the double-buffered LD ∥ EX ∥ ST
+    pipeline: two scratch banks (strip i+1's fill DMAs — wrap prologue
+    and torus corners included — fly while strip i is reduced), two
+    output banks (each store is issued async and waited two steps later),
+    per-bank DMA semaphores. ``overlap=False`` is the serial reference:
+    one bank, start+wait fill, BlockSpec store — bit-identical output.
+    VMEM per step: banks × [(S+2r)×(Tw+2r lane-padded) scratch + S×Tw
+    output block] + the coefficient file (see
+    :func:`plan_vmem_working_set`) — still the row-buffer bound,
+    independent of both frame height and width.
     """
+    if grid_order not in GRID_ORDERS:
+        raise ValueError(f"unknown grid_order {grid_order!r}; choose from "
+                         f"{GRID_ORDERS}")
     w = coeffs.shape[-1]
     M = planes.shape[0]
     N = coeffs.shape[0]
     S, Tw = plan.rows.block, plan.cols.block
     n_i, n_j = plan.rows.n, plan.cols.n
+    filters_inner = grid_order == "filters_innermost"
     c_block = (1, 2, w) if form == "separable" else (1, w, w)
+    if filters_inner:
+        c_map = lambda m, jj, ii, f: (f, 0, 0)        # noqa: E731
+        o_map = lambda m, jj, ii, f: (m, f, ii, jj)   # noqa: E731
+        grid = (M, n_j, n_i, N)
+    else:
+        c_map = lambda m, jj, f, ii: (f, 0, 0)        # noqa: E731
+        o_map = lambda m, jj, f, ii: (m, f, ii, jj)   # noqa: E731
+        grid = (M, n_j, N, n_i)
     in_specs = [
         pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-        pl.BlockSpec(c_block, lambda m, jj, ii, f: (f, 0, 0)),
+        pl.BlockSpec(c_block, c_map),
     ]
     operands = [planes, coeffs]
     name = f"filter2d_halo_{form}_{plan.policy}"
@@ -241,16 +388,31 @@ def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
         operands.append(q_params)
         in_specs.append(pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.SMEM))
         name += f"_requant_{plan.requant.rounding}"
+    odt = out_dtype(plan, planes.dtype)
+    ext_banks, out_banks = plan_banks(plan, N, overlap)
+    if overlap:
+        # the output is ANY-space: the kernel owns the stores (manual
+        # async copies from the obuf banks), not a BlockSpec
+        out_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+        scratch = [pltpu.VMEM((ext_banks, plan.eh, plan.ew), planes.dtype),
+                   pltpu.VMEM((out_banks, S, Tw), odt),
+                   pltpu.SemaphoreType.DMA((ext_banks,)),
+                   pltpu.SemaphoreType.DMA((out_banks,))]
+        name += "_db"
+    else:
+        out_spec = pl.BlockSpec((1, 1, S, Tw), o_map)
+        scratch = [pltpu.VMEM((plan.eh, plan.ew), planes.dtype),
+                   pltpu.SemaphoreType.DMA]
     return pl.pallas_call(
-        functools.partial(_halo_kernel, plan=plan, form=form, w=w),
-        out_shape=jax.ShapeDtypeStruct((M, N, n_i * S, n_j * Tw),
-                                       out_dtype(plan, planes.dtype)),
-        grid=(M, n_j, n_i, N),
+        functools.partial(_halo_kernel, plan=plan, form=form, w=w,
+                          n_filters=N, grid_order=grid_order,
+                          overlap=overlap, ext_banks=ext_banks,
+                          out_banks=out_banks),
+        out_shape=jax.ShapeDtypeStruct((M, N, n_i * S, n_j * Tw), odt),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec(
-            (1, 1, S, Tw), lambda m, jj, ii, f: (m, f, ii, jj)),
-        scratch_shapes=[pltpu.VMEM((plan.eh, plan.ew), planes.dtype),
-                        pltpu.SemaphoreType.DMA],
+        out_specs=out_spec,
+        scratch_shapes=scratch,
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary",
@@ -260,19 +422,25 @@ def filter2d_halo(planes: jax.Array, coeffs: jax.Array, plan: HaloPlan, *,
 
 
 def plan_vmem_working_set(plan: HaloPlan, *, num_filters: int = 1,
-                          separable: bool = False) -> int:
+                          separable: bool = False,
+                          overlap: bool = True) -> int:
     """VMEM bytes per grid step straight from a *built* plan.
 
     The plan-exact twin of :func:`stream_vmem_working_set`: the scratch is
     the plan's own ``eh × ew`` (lane padding and halo margins included) at
     storage width, the output tile ``strip × tile`` at the plan's write
-    width, and the coefficient file at the accumulator width. This is what
+    width, and the coefficient file at the accumulator width — each buffer
+    multiplied by the bank count :func:`plan_banks` says the kernel
+    actually allocates (2 each in the overlapped steady state, collapsing
+    to 1 where the plan has nothing to prefetch or pre-wait). This is what
     the ``CompiledFilter`` front door reports (and what its
     ``execution='auto'`` selection audits against the ``vmem_budget``
     knob) — one number per compiled pipeline, no re-derivation."""
     w = 2 * plan.rows.r + 1
-    scratch = plan.eh * plan.ew * plan.dtype_bytes
-    out_tile = plan.rows.block * plan.cols.block * plan.out_dtype_bytes
+    ext_banks, out_banks = plan_banks(plan, num_filters, overlap)
+    scratch = ext_banks * plan.eh * plan.ew * plan.dtype_bytes
+    out_tile = (out_banks * plan.rows.block * plan.cols.block
+                * plan.out_dtype_bytes)
     coeff = num_filters * (2 * w if separable else w * w) * plan.acc_bytes
     return scratch + out_tile + coeff
 
@@ -282,15 +450,20 @@ def stream_vmem_working_set(strip_h: int, tile_w: int, w: int,
                             separable: bool = False,
                             num_filters: int = 1,
                             acc_dtype_bytes: int = None,
-                            out_dtype_bytes: int = None) -> int:
+                            out_dtype_bytes: int = None,
+                            ext_banks: int = 1,
+                            out_banks: int = 1) -> int:
     """Bytes resident in VMEM per stream grid step (the row-buffer bound).
 
-    The halo-extended scratch + the output tile + the coefficient file. A
-    function of (strip_h, tile_w, w) ONLY — never of the frame dimensions;
-    this is the invariant the 2D tiling exists to provide. (The in-kernel
-    halo engine halved the old bound: the scratch doubles as strip buffer
-    AND line buffer, and the input tile no longer needs a second VMEM
-    block — it is DMA'd from HBM directly into the scratch.)
+    ``ext_banks`` × the halo-extended scratch + ``out_banks`` × the output
+    tile + the coefficient file. A function of (strip_h, tile_w, w, banks)
+    ONLY — never of the frame dimensions; this is the invariant the 2D
+    tiling exists to provide. The in-kernel halo engine keeps the scratch
+    single-purpose (strip buffer AND line buffer in one block, DMA'd from
+    HBM directly — no second input tile); the double-buffered kernel banks
+    that scratch and the output tile ×2 (pass the counts
+    :func:`plan_banks` computes) to overlap the next strip's DMA and the
+    previous tile's store with the reduction.
 
     Dtype-aware in both directions: ``dtype_bytes`` is the *storage* width
     (the scratch the DMA fills), ``acc_dtype_bytes`` the accumulator width
@@ -309,7 +482,7 @@ def stream_vmem_working_set(strip_h: int, tile_w: int, w: int,
     r = (w - 1) // 2
     ew = tile_w + 2 * r
     ew += (-ew) % LANE                   # lane padding, as the plan lays out
-    ext_scratch = (strip_h + 2 * r) * ew * dtype_bytes
-    out_tile = strip_h * tile_w * out_dtype_bytes
+    ext_scratch = ext_banks * (strip_h + 2 * r) * ew * dtype_bytes
+    out_tile = out_banks * strip_h * tile_w * out_dtype_bytes
     coeff = num_filters * (2 * w if separable else w * w) * acc_dtype_bytes
     return ext_scratch + out_tile + coeff

@@ -108,12 +108,14 @@ def resolve_strip_tile(H: int, W: int, w: int, border: BorderSpec,
 @functools.partial(
     jax.jit,
     static_argnames=("form", "border", "regime", "strip_h", "tile_w",
-                     "interpret", "requant"))
+                     "interpret", "requant", "overlap", "grid_order"))
 def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array,
                             q_params: Optional[jax.Array] = None, *,
                             form: str, border: BorderSpec, regime: str,
                             strip_h: int, tile_w: int, interpret: bool,
-                            requant: Optional[RequantSpec] = None
+                            requant: Optional[RequantSpec] = None,
+                            overlap: bool = True,
+                            grid_order: str = "filters_innermost"
                             ) -> jax.Array:
     """planes: [M, H, W]; coeffs: [N, w, w] (or [N, 2, w] factors for
     ``form='separable'``). Returns [M, N, Ho, Wo].
@@ -121,7 +123,10 @@ def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array,
     ``requant`` here is the *gain-free* static half of the spec (rounding
     mode + storage dtype — what shapes the trace and the plan); the
     actual per-filter (multiplier, shift) table is the traced ``q_params``
-    operand, so a served pipeline swaps gains without recompiling."""
+    operand, so a served pipeline swaps gains without recompiling.
+    ``overlap`` selects the double-buffered LD∥EX∥ST kernel (default) or
+    the serial reference; ``grid_order`` the innermost grid dim (the fill
+    guard follows it — both orders are parity-pinned)."""
     M, H, W = planes.shape
     w = coeffs.shape[-1]
     S, Tw, Ho, Wo = resolve_strip_tile(H, W, w, border, regime, strip_h,
@@ -133,7 +138,8 @@ def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array,
     plan = halo.make_plan(H, W, w, border, S, Tw, dtype=planes.dtype,
                           requant=requant)
     y = K.filter2d_halo(planes, coeffs, plan, q_params=q_params, form=form,
-                        interpret=interpret)
+                        interpret=interpret, overlap=overlap,
+                        grid_order=grid_order)
     return y[:, :, :Ho, :Wo]
 
 
@@ -143,6 +149,7 @@ def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
                     regime: str = "stream", strip_h: int = 128,
                     tile_w: int = 512, separable=False,
                     requant: Optional[RequantSpec] = None,
+                    overlap: bool = True,
                     interpret: Optional[bool] = None) -> jax.Array:
     """Pallas-kernel 2D filter. frame: [H,W] | [H,W,C] | [B,H,W,C].
 
@@ -170,6 +177,10 @@ def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
     ≈2 HBM bytes/pixel instead of ≈5). Without it the caller owns
     requantisation.
 
+    ``overlap=True`` (default) runs the double-buffered kernel — two-bank
+    scratch, prefetched strip DMA, async stores; ``overlap=False`` the
+    serial reference path (bit-identical output, no LD/EX/ST overlap).
+
     Thin wrapper over the plan-and-execute front door: prefer
     ``core.pipeline.Filter2D(...).compile(frame, 'pallas')`` for served
     pipelines — it caches the compiled plan and swaps coefficients,
@@ -186,7 +197,7 @@ def filter2d_pallas(frame: jax.Array, coeffs: jax.Array, *,
                     dtype=jnp.dtype(frame.dtype).name,
                     requant=rq.gain_free() if rq is not None else None)
     cf = spec.compile(frame, "pallas", regime=regime, strip_h=strip_h,
-                      tile_w=tile_w, interpret=interpret)
+                      tile_w=tile_w, interpret=interpret, overlap=overlap)
     return cf(frame, uv if uv is not None else coeffs, gains=rq)
 
 
@@ -196,6 +207,7 @@ def filter_bank_pallas(frame: jax.Array, bank: jax.Array, *,
                        regime: str = "stream", strip_h: int = 128,
                        tile_w: int = 512,
                        requant: Optional[RequantSpec] = None,
+                       overlap: bool = True,
                        interpret: Optional[bool] = None) -> jax.Array:
     """Apply a bank of N filters in one kernel launch: bank [N, w, w] ->
     output [..., N]. The filter dim is a kernel grid dimension — the halo
@@ -220,5 +232,5 @@ def filter_bank_pallas(frame: jax.Array, bank: jax.Array, *,
                     dtype=jnp.dtype(frame.dtype).name,
                     requant=rq.gain_free() if rq is not None else None)
     cf = spec.compile(frame, "pallas", regime=regime, strip_h=strip_h,
-                      tile_w=tile_w, interpret=interpret)
+                      tile_w=tile_w, interpret=interpret, overlap=overlap)
     return cf(frame, bank, gains=rq)

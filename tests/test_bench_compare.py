@@ -8,7 +8,7 @@ missing artifacts and single-outlier baseline runs.
 """
 import json
 
-from benchmarks.compare import (compare, index_rows, main,
+from benchmarks.compare import (compare, index_rows, main, unknown_keys,
                                 windowed_baseline)
 
 
@@ -93,6 +93,45 @@ def test_new_rows_seed_without_failing():
     failures, notes = compare(BASE, cur)
     assert failures == []
     assert any("new row" in n for n in notes)
+
+
+def test_unknown_geometry_keys_reseed_not_fail():
+    """A kernel-generation change stamps new geometry keys on its rows
+    (here ``banks=2`` from the double-buffered halo engine); the baseline
+    predates them, so its timings/byte metrics came from a different
+    datapath. The row must re-seed like a new row — even when the metrics
+    would otherwise scream regression."""
+    base = _payload([_row("pallas_halo/direct/mirror")])
+    cur = _payload([_row("pallas_halo/direct/mirror", rate=0.5e6, bpp=9.9,
+                         banks=2.0)])
+    failures, notes = compare(base, cur)
+    assert failures == []
+    assert any("re-seeds" in n and "banks" in n for n in notes)
+
+
+def test_known_geometry_keys_still_gate():
+    """Once the window has seen the geometry keys, the gate is back on:
+    same descriptor set -> metrics are comparable -> regressions fail."""
+    base = _payload([_row("pallas_halo/direct/mirror", banks=2.0)])
+    cur = _payload([_row("pallas_halo/direct/mirror", rate=0.5e6,
+                         banks=2.0)])
+    failures, _ = compare(base, cur)
+    assert len(failures) == 1 and "pixels_per_s" in failures[0]
+
+
+def test_unknown_keys_ignores_metric_and_bookkeeping_keys():
+    """Only descriptor keys trigger the re-seed: the windowed metric keys
+    and the name/us_per_call/error bookkeeping never count as unknown,
+    so a baseline row that merely lacked a *metric* sample still gates on
+    the metrics both sides do have."""
+    base = {"name": "r", "us_per_call": 100.0, "pixels_per_s": 1e6}
+    cur = _row("r", rate=0.5e6, banks=2.0, read_amplification=1.05)
+    assert unknown_keys(base, cur) == ["banks", "read_amplification"]
+    # metric-only additions are not descriptors:
+    cur2 = _row("r", rate=0.5e6)
+    assert unknown_keys(base, cur2) == []
+    failures, _ = compare(_payload([base]), _payload([cur2]))
+    assert len(failures) == 1 and "pixels_per_s" in failures[0]
 
 
 def test_error_rows_are_not_indexed():

@@ -286,15 +286,20 @@ def test_derived_geometry_keeps_bench_gate_budgets(budget):
 
 def test_derive_strip_tile_narrow_dtypes_deepen_strips():
     """int8 scratch and a requantised output tile free VMEM; the derived
-    geometry spends it on deeper strips (less row-overlap re-reading) —
-    the ROADMAP's autotuning point, now a property of the planner."""
+    geometry spends it on a bigger per-step working set at no worse read
+    amplification (deeper strips, or full-width tiles at the same depth)
+    — the ROADMAP's autotuning point, now a property of the planner."""
     budget = 2 ** 20
+    r = 2
     s_f32, t_f32 = halo.derive_strip_tile(2160, 3840, 5, dtype=np.float32,
                                           vmem_budget=budget)
     s_i8, t_i8 = halo.derive_strip_tile(
         2160, 3840, 5, dtype=np.int8, vmem_budget=budget,
         requant=RequantSpec(multiplier=1, shift=8, dtype="int8"))
-    assert (s_i8, t_i8) >= (s_f32, t_f32)
+    def amp(s, t):
+        return (1 + 2 * r / s) * (1 + 2 * r / t)
+    assert amp(s_i8, t_i8) <= amp(s_f32, t_f32)
+    assert s_i8 * t_i8 >= s_f32 * t_f32      # freed bytes buy pixels/step
     assert s_i8 >= 4 * s_f32 or t_i8 > t_f32
     # and both stay inside the budget they were derived from
     for s, t, dt, rq in ((s_f32, t_f32, np.float32, None),

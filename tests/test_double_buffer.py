@@ -1,0 +1,202 @@
+"""Double-buffered halo engine: parity, grid-order and planner edge cases.
+
+The overlapped kernel (two-bank scratch, strip s+1 prefetched while strip
+s reduces, async store epilogue) must be *bit-exact* against the serial
+reference path — same plan, same mux, same MAC order — for every border
+policy × form × dtype. The sweep runs a 3-strip × 3-tile geometry so the
+prefetch path is genuinely exercised: strip s+1's main copy AND its wrap
+prologue DMAs (torus corners included) land in the bank the compute step
+is *not* reading.
+
+Also here: the two serial-refill bugs the overlap work exposed —
+  * the ``pl.when(f == 0)`` refill guard must follow the grid order, or
+    filters f>0 read stale scratch when the filter dim is not innermost
+    (grid-order independence is pinned);
+  * ``derive_strip_tile`` must clamp degenerate frames (narrower than a
+    lane tile, shallower than ``max(2r, 8)``) to the 1-strip/1-tile plan,
+    and ``neglect`` below its 2r+1 minimum extent must raise a clean
+    ``ValueError`` at plan time.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import filters
+from repro.core.border_spec import BorderSpec
+from repro.core.filter2d import filter2d
+from repro.core.requant import RequantSpec
+from repro.kernels.filter2d import (filter2d_pallas, filter_bank_pallas,
+                                    halo)
+from repro.kernels.filter2d import kernel as K
+from repro.kernels.filter2d import ops
+
+POLICIES = ("mirror", "wrap", "constant", "duplicate", "mirror_dup")
+
+# 3 row strips × 3 column tiles: the smallest geometry where the steady
+# state holds all three pipeline stages at once (LD(s+1) ∥ EX(s) ∥ ST) and
+# wrap's torus-corner DMAs land in the prefetch bank.
+H, W = 40, 300
+STRIP, TILE = 16, 128
+
+
+def _f32(rng, h=H, w=W):
+    return jnp.asarray(rng.standard_normal((h, w)).astype(np.float32))
+
+
+def _i8(rng, h=H, w=W):
+    return jnp.asarray(rng.integers(-20, 20, (h, w)).astype(np.int8))
+
+
+def _assert_parity(run):
+    """run(overlap) twice; the double-buffered path must be bit-exact."""
+    db, serial = run(True), run(False)
+    assert db.dtype == serial.dtype and db.shape == serial.shape
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(serial))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "int8"])
+@pytest.mark.parametrize("policy", POLICIES + ("neglect",))
+def test_direct_overlap_matches_serial(policy, dtype):
+    rng = np.random.default_rng(7)
+    if dtype == "float32":
+        x, k = _f32(rng), jnp.asarray(filters.gaussian(5))
+    else:
+        x = _i8(rng)
+        k = jnp.asarray(rng.integers(-8, 9, (5, 5)).astype(np.int32))
+    spec = BorderSpec(policy, 3.0)
+    _assert_parity(lambda ov: filter2d_pallas(
+        x, k, border=spec, regime="stream", strip_h=STRIP, tile_w=TILE,
+        overlap=ov))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "int8"])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_separable_overlap_matches_serial(policy, dtype):
+    rng = np.random.default_rng(11)
+    if dtype == "float32":
+        x = _f32(rng)
+        u = np.array([1.0, 2.0, 4.0, 2.0, 1.0], np.float32)
+        v = np.array([1.0, 3.0, 5.0, 3.0, 1.0], np.float32)
+    else:
+        x = _i8(rng)
+        u = np.array([1, 2, 4, 2, 1], np.int32)
+        v = np.array([1, 3, 5, 3, 1], np.int32)
+    k = jnp.asarray(np.outer(u, v))
+    spec = BorderSpec(policy, 3.0)
+    _assert_parity(lambda ov: filter2d_pallas(
+        x, k, border=spec, separable=(u, v), regime="stream",
+        strip_h=STRIP, tile_w=TILE, overlap=ov))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "int8"])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_bank_overlap_matches_serial(policy, dtype):
+    """N=3 bank: the filter grid dim multiplies the store pipeline's step
+    count (T = strips × N) — the drain bookkeeping is policy-independent
+    but the wrap prologue is not."""
+    rng = np.random.default_rng(13)
+    if dtype == "float32":
+        x = _f32(rng)
+        bank = jnp.asarray(rng.standard_normal((3, 5, 5)).astype(np.float32))
+    else:
+        x = _i8(rng)
+        bank = jnp.asarray(rng.integers(-8, 9, (3, 5, 5)).astype(np.int32))
+    spec = BorderSpec(policy, 3.0)
+    _assert_parity(lambda ov: filter_bank_pallas(
+        x, bank, border=spec, regime="stream", strip_h=STRIP, tile_w=TILE,
+        overlap=ov))
+
+
+@pytest.mark.parametrize("policy", ("mirror", "wrap"))
+def test_requant_epilogue_overlap_matches_serial(policy):
+    """The async-store epilogue carries the *narrow* requantised tile:
+    int8 in, int8 out, both directions through the two-bank pipeline."""
+    rng = np.random.default_rng(17)
+    x = _i8(rng)
+    k = jnp.asarray(rng.integers(-8, 9, (5, 5)).astype(np.int32))
+    rq = RequantSpec(multiplier=3, shift=9, rounding="nearest", dtype="int8")
+    _assert_parity(lambda ov: filter2d_pallas(
+        x, k, border=BorderSpec(policy), regime="stream", strip_h=STRIP,
+        tile_w=TILE, requant=rq, overlap=ov))
+    rq_bank = RequantSpec(multiplier=(3, 1, 2), shift=(9, 8, 9),
+                          rounding="nearest", dtype="int8")
+    bank = jnp.asarray(rng.integers(-8, 9, (3, 5, 5)).astype(np.int32))
+    _assert_parity(lambda ov: filter_bank_pallas(
+        x, bank, border=BorderSpec(policy), regime="stream", strip_h=STRIP,
+        tile_w=TILE, requant=rq_bank, overlap=ov))
+
+
+# -- satellite: refill guard follows the grid order -------------------------
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_bank_grid_order_independence(overlap):
+    """The ``f == 0`` refill guard is only correct when the filter dim is
+    innermost; with strips innermost every (strip, filter) step sees a
+    fresh strip, so the guard must drop away. Both grid orders must agree
+    bit-exactly with each other and with the core oracle — the regression
+    this PR's audit fixed (stale scratch read by filters f > 0)."""
+    rng = np.random.default_rng(23)
+    x = _f32(rng)
+    bank = rng.standard_normal((3, 5, 5)).astype(np.float32)
+    spec = BorderSpec("wrap")
+    outs = {}
+    for order in K.GRID_ORDERS:
+        outs[order] = np.asarray(ops._filter2d_pallas_planes(
+            jnp.asarray(x)[None], jnp.asarray(bank), None, form="direct",
+            border=spec, regime="stream", strip_h=STRIP, tile_w=TILE,
+            interpret=True, overlap=overlap, grid_order=order))
+    first, *rest = outs.values()
+    for other in rest:
+        np.testing.assert_array_equal(first, other)
+    want = np.stack([np.asarray(filter2d(x, jnp.asarray(bank[n]),
+                                         border=spec))
+                     for n in range(3)])
+    np.testing.assert_allclose(first[0], want, rtol=3e-5, atol=3e-5)
+
+
+# -- satellite: derive_strip_tile degenerate-frame clamping -----------------
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+@pytest.mark.parametrize("edge_w", [2, 3, 7])      # r, 2r-1, 7 for w=5
+@pytest.mark.parametrize("edge_h", [2, 3, 7])
+def test_derive_clamps_degenerate_frames(edge_h, edge_w, overlap):
+    """Frames narrower than one lane tile / shallower than max(2r, 8)
+    collapse to the 1-strip/1-tile plan — never strip_h > H or a tile
+    wider than the lane-padded output."""
+    s, t = halo.derive_strip_tile(edge_h, edge_w, 5, overlap=overlap)
+    assert 1 <= s <= edge_h
+    assert t == halo.LANE                       # wo_pad of any W <= 128
+    plan = halo.make_plan(edge_h, edge_w, 5, BorderSpec("duplicate"), s, t)
+    assert plan.rows.n == 1 and plan.cols.n == 1
+
+
+@pytest.mark.parametrize("extent", [2, 3, 4])      # r, 2r-1, 2r < 2r+1
+def test_neglect_below_window_raises_clean_valueerror(extent):
+    """neglect has no border at all: every output needs its full 2r+1-tap
+    window in-frame. Below that the plan must be rejected with a clean
+    ValueError at plan time, not a deep assertion in the axis planner."""
+    with pytest.raises(ValueError, match="neglect"):
+        halo.make_plan(extent, 64, 5, BorderSpec("neglect"), 8, 128)
+    with pytest.raises(ValueError, match="neglect"):
+        halo.make_plan(64, extent, 5, BorderSpec("neglect"), 8, 128)
+    # the boundary itself is fine (one valid output row)
+    plan = halo.make_plan(5, 64, 5, BorderSpec("neglect"), 8, 128)
+    assert plan.rows.n == 1
+
+
+@pytest.mark.parametrize("hw", [(7, 7), (3, 7), (7, 3)])
+def test_tiny_frames_execute_and_match_oracle(hw):
+    """End-to-end on degenerate geometry: the default (overlapped) kernel
+    runs the 1-strip/1-tile plan and matches the core oracle."""
+    h, w = hw
+    rng = np.random.default_rng(29)
+    x = _f32(rng, h, w)
+    k = jnp.asarray(filters.gaussian(5))
+    spec = BorderSpec("duplicate")
+    got = filter2d_pallas(x, k, border=spec, regime="stream")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(filter2d(x, k, border=spec)),
+                               rtol=3e-5, atol=3e-5)

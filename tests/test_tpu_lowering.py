@@ -135,6 +135,69 @@ def test_filter_bank_lowers(dtype):
         _sds((128, 256), dtype), _sds((3, 5, 5), cdtype))
 
 
+# -- double-buffered (overlap) vs serial lanes -------------------------------
+# strip_h=64 on a 128-row frame = 2 strips: the overlap kernel prefetches
+# strip 1's window (wrap prologue DMAs included) into the second scratch
+# bank while reducing strip 0, and the async-store epilogue drains through
+# the banked output buffer — the dynamic-bank DMA descriptors and per-bank
+# semaphore arrays all have to make it through Mosaic. ``overlap=False``
+# keeps the serial reference kernel lowering too.
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_filter2d_float_overlap_and_serial_lower(overlap):
+    _assert_lowers(
+        functools.partial(filter2d_pallas, border=BorderSpec("wrap"),
+                          regime="stream", strip_h=64, tile_w=128,
+                          overlap=overlap, interpret=False),
+        FRAME, K5)
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_filter2d_int8_overlap_and_serial_lower(overlap):
+    _assert_lowers(
+        functools.partial(filter2d_pallas, border=BorderSpec("mirror"),
+                          regime="stream", strip_h=64, tile_w=128,
+                          overlap=overlap, interpret=False),
+        _sds((128, 256), jnp.int8), _sds((5, 5), jnp.int32))
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_filter2d_requant_overlap_and_serial_lower(overlap):
+    """The async store carries the *narrow* requantised tile: the banked
+    int8 output buffer and its late-waited copies must lower."""
+    rq = RequantSpec(multiplier=3, shift=7, rounding="nearest_even",
+                     dtype="int8")
+    _assert_lowers(
+        functools.partial(filter2d_pallas, border=BorderSpec("constant", 3.0),
+                          regime="stream", strip_h=64, tile_w=128,
+                          requant=rq, overlap=overlap, interpret=False),
+        _sds((128, 256), jnp.int8), _sds((5, 5), jnp.int32))
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_filter_bank_overlap_and_serial_lower(overlap):
+    """N=3 bank: T = strips × N store steps through the two output banks."""
+    _assert_lowers(
+        functools.partial(filter_bank_pallas, border=BorderSpec("wrap"),
+                          regime="stream", strip_h=64, tile_w=128,
+                          overlap=overlap, interpret=False),
+        _sds((128, 256), jnp.float32), _sds((3, 5, 5), jnp.float32))
+
+
+def test_filter2d_strips_innermost_overlap_lowers():
+    """The alternate grid order (strips innermost, unconditional refill)
+    drives the same banked machinery through Mosaic."""
+    from repro.kernels.filter2d import ops
+
+    _assert_lowers(
+        functools.partial(ops._filter2d_pallas_planes, form="direct",
+                          border=BorderSpec("wrap"), regime="stream",
+                          strip_h=64, tile_w=128, interpret=False,
+                          overlap=True, grid_order="strips_innermost"),
+        _sds((1, 128, 256), jnp.float32), _sds((3, 5, 5), jnp.float32))
+
+
 def test_filter2d_small_regime_lowers():
     _assert_lowers(
         functools.partial(filter2d_pallas, border=BorderSpec("mirror"),
