@@ -40,6 +40,11 @@ def _auto_row(name, spec, x, coeffs, gains=None, **compile_kw):
     if cf.plan is not None:
         derived += (f";hbm_bytes_per_pixel={cf.hbm_bytes_per_pixel():.2f}"
                     f";vmem_working_set={cf.vmem_working_set()}")
+        # analytic two-ceiling roofline prediction (repro.obs.roofline
+        # via explain()): what the plan says this geometry could sustain
+        roof = cf.explain(as_dict=True)["roofline"]
+        derived += (f";predicted_pixels_per_s="
+                    f"{roof['predicted_pixels_per_s']:.3e}")
     if cf.strip_h is not None:
         derived += f";strip_h={cf.strip_h}"
     if cf.execution == "pallas" and cf.plan is not None:

@@ -64,6 +64,14 @@ WINDOWED_KEYS = (RATE_KEY,) + BYTES_KEYS
 # Row bookkeeping fields that are never geometry descriptors.
 BOOKKEEPING_KEYS = ("name", "us_per_call", "error")
 
+# Latency-spread keys ``common.Timing`` stamps on timed rows, plus the
+# ``noisy`` stability flag. Measurement metadata, not geometry: their
+# appearance must neither re-seed the trajectory nor fail the gate —
+# added to the ``unknown_keys`` skip set so a baseline that predates
+# them stays comparable.
+LATENCY_KEYS = ("p50_us", "p90_us", "p99_us", "iqr_us")
+NOISY_KEY = "noisy"
+
 DEFAULT_WINDOW = 5
 DEFAULT_MAX_RATE_DROP = 0.10
 
@@ -74,7 +82,8 @@ def unknown_keys(base_row: dict, cur_row: dict) -> List[str]:
     generation added (``banks=2``, overlap markers, ...). A non-empty
     result means the two rows describe *different datapaths*: the gate
     must re-seed, not diff."""
-    skip = set(WINDOWED_KEYS) | set(BOOKKEEPING_KEYS)
+    skip = (set(WINDOWED_KEYS) | set(BOOKKEEPING_KEYS)
+            | set(LATENCY_KEYS) | {NOISY_KEY})
     return sorted(k for k in cur_row
                   if k not in skip and k not in base_row)
 
@@ -162,12 +171,20 @@ def compare(baseline: Union[dict, Sequence[dict]], current: dict, *,
         if RATE_KEY in b and RATE_KEY in c:
             floor = b[RATE_KEY] * (1.0 - max_rate_drop)
             if c[RATE_KEY] < floor:
-                failures.append(
+                msg = (
                     f"{name}: {RATE_KEY} regressed "
                     f"{b[RATE_KEY]:.3e} -> {c[RATE_KEY]:.3e} "
                     f"({100 * (1 - c[RATE_KEY] / b[RATE_KEY]):.1f}% drop "
                     f"> {100 * max_rate_drop:.0f}% allowed vs "
                     f"median-of-{min(len(baseline), window)})")
+                if c.get(NOISY_KEY):
+                    # the run itself flagged this row unstable (IQR/median
+                    # over the noise threshold): its timing cannot convict
+                    # — warn, never fail, on a rate-only regression
+                    notes.append(f"{msg} [WARN ONLY: row flagged noisy — "
+                                 "IQR/median over threshold]")
+                else:
+                    failures.append(msg)
         for key in BYTES_KEYS:
             if key in b and key in c and c[key] > b[key] + bytes_tol:
                 failures.append(f"{name}: {key} increased "

@@ -58,11 +58,22 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a BENCH_*.json trajectory record here")
+    ap.add_argument("--obs-jsonl", default=None, metavar="PATH",
+                    help="enable repro.obs tracing for the whole run and "
+                         "stream every event (plan/auto_select/compile/"
+                         "execute) to this JSONL file; the metrics-registry "
+                         "export rides into the --json payload as "
+                         "'obs_metrics'")
     args = ap.parse_args(argv)
 
     from benchmarks import common
     if args.smoke:
         common.SMOKE = True
+
+    obs = None
+    if args.obs_jsonl:
+        from repro import obs
+        obs.enable(jsonl=args.obs_jsonl)
 
     from benchmarks import (bench_border_overhead, bench_filter_forms,
                             bench_hls_comparison, bench_lm_roofline,
@@ -108,9 +119,17 @@ def main(argv=None) -> None:
             "failures": failures,
             "rows": records,
         }
+        if obs is not None:
+            payload["obs_metrics"] = obs.REGISTRY.export()
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=1)
         print(f"# wrote {len(records)} records -> {args.json}",
+              file=sys.stderr)
+
+    if obs is not None:
+        n = obs.get_trace().emitted
+        obs.disable()          # flushes + closes the JSONL sink
+        print(f"# wrote {n} obs events -> {args.obs_jsonl}",
               file=sys.stderr)
 
     if failures:

@@ -5,8 +5,12 @@ The filtering front door re-exports here: declare the filter's static
 structure with :class:`Filter2D` (+ :class:`BorderSpec` /
 :class:`RequantSpec`), ``compile`` it for one frame geometry, and stream
 frames with runtime-swappable coefficients and gains through the returned
-:class:`CompiledFilter`. ``__all__`` is pinned by tests/test_public_api.py.
+:class:`CompiledFilter`. ``repro.obs`` is the observability subsystem
+(``obs.enable()`` for plan/compile/execute tracing, counters, profiler
+hooks — see docs/observability.md). ``__all__`` is pinned by
+tests/test_public_api.py.
 """
+from repro import obs
 from repro.core.border_spec import BorderSpec
 from repro.core.pipeline import CompiledFilter, Filter2D
 from repro.core.requant import RequantSpec
@@ -16,4 +20,5 @@ __all__ = [
     "CompiledFilter",
     "Filter2D",
     "RequantSpec",
+    "obs",
 ]

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -41,13 +42,17 @@ from repro.core.border_spec import BorderSpec, quantize_constant
 from repro.core.filter2d import (FORMS, _filter2d_impl, _filter2d_sep_impl,
                                  _filter2d_xla_impl, _filter_bank_impl,
                                  apply_requant, apply_requant_params,
-                                 is_fixed_point)
+                                 is_fixed_point, macs_per_pixel)
 from repro.core.requant import RequantSpec
 from repro.core.streaming import (_filter2d_streaming_impl,
                                   strip_height_for_vmem)
 from repro.kernels.filter2d import halo
 from repro.kernels.filter2d import kernel as K
 from repro.kernels.filter2d import ops
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
+from repro.obs import profiler as obs_profiler
+from repro.obs import roofline as obs_roofline
 
 DEFAULT_VMEM_BUDGET = halo.DEFAULT_VMEM_BUDGET
 
@@ -135,7 +140,8 @@ class Filter2D:
                 tile_w: Optional[int] = None,
                 regime: Optional[str] = None,
                 overlap: bool = True,
-                interpret: Optional[bool] = None) -> "CompiledFilter":
+                interpret: Optional[bool] = None,
+                profile_dump: Optional[str] = None) -> "CompiledFilter":
         """Plan the pipeline for one frame geometry and executor.
 
         ``frame_spec``: a shape tuple ([H,W] | [H,W,C] | [B,H,W,C]), a
@@ -150,14 +156,16 @@ class Filter2D:
         versus the serial reference path. Results are memoised: the same
         (spec, geometry, knobs) returns the same ``CompiledFilter`` —
         and therefore the same jit cache — so wrapping entry points stay
-        cheap per call.
+        cheap per call. ``profile_dump`` (opt-in) captures the first
+        executed call under ``jax.profiler.trace`` into that directory.
         """
         shape = _frame_shape(frame_spec, self.dtype)
         if execution not in EXECUTIONS:
             raise ValueError(f"unknown execution {execution!r}; choose "
                              f"from {EXECUTIONS}")
         return _compiled(self, shape, execution, mesh, axis, vmem_budget,
-                         strip_h, tile_w, regime, bool(overlap), interpret)
+                         strip_h, tile_w, regime, bool(overlap), interpret,
+                         profile_dump)
 
 
 def _frame_shape(frame_spec, dtype_name: str) -> Tuple[int, ...]:
@@ -183,11 +191,12 @@ def _frame_shape(frame_spec, dtype_name: str) -> Tuple[int, ...]:
 
 @functools.lru_cache(maxsize=256)
 def _compiled(spec, shape, execution, mesh, axis, vmem_budget, strip_h,
-              tile_w, regime, overlap, interpret) -> "CompiledFilter":
+              tile_w, regime, overlap, interpret,
+              profile_dump=None) -> "CompiledFilter":
     return CompiledFilter(spec, shape, execution, mesh=mesh, axis=axis,
                           vmem_budget=vmem_budget, strip_h=strip_h,
                           tile_w=tile_w, regime=regime, overlap=overlap,
-                          interpret=interpret)
+                          interpret=interpret, profile_dump=profile_dump)
 
 
 class CompiledFilter:
@@ -224,12 +233,16 @@ class CompiledFilter:
                  tile_w: Optional[int] = None,
                  regime: Optional[str] = None,
                  overlap: bool = True,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 profile_dump: Optional[str] = None):
+        t_compile0 = time.perf_counter()
         self.spec = spec
         self.frame_shape = frame_shape
         self.mesh = mesh
         self.axis = axis
         self.overlap = bool(overlap)
+        self.profile_dump = profile_dump
+        self._profiled = False
         self.vmem_budget = (DEFAULT_VMEM_BUDGET if vmem_budget is None
                             else int(vmem_budget))
         self.interpret = (ops._default_interpret() if interpret is None
@@ -260,18 +273,40 @@ class CompiledFilter:
             out_dtype_bytes=out_b,
             out_banks=2 if (self.overlap and spec.num_filters > 1) else 1)
 
+        requested = execution
         if execution == "auto":
             if mesh is not None:
                 execution = "sharded"
+                self.selection = ("mesh", "a mesh was supplied -> "
+                                  "halo-exchange shard_map executor")
             elif self.resident_vmem_bytes <= self.vmem_budget:
                 execution = "pallas"
                 regime = "small" if regime is None else regime
+                self.selection = (
+                    "pixel_cache",
+                    f"frame-resident working set "
+                    f"{self.resident_vmem_bytes} B fits vmem_budget "
+                    f"{self.vmem_budget} B -> pallas regime='small'")
             elif (spec.num_filters == 1 and not spec.separable and same
                   and self._H >= max(w - 1, 1)):
                 execution = "streaming"
+                self.selection = (
+                    "row_buffer",
+                    f"frame-resident working set "
+                    f"{self.resident_vmem_bytes} B exceeds vmem_budget "
+                    f"{self.vmem_budget} B -> jnp strip scan with "
+                    "budget-derived strip height")
             else:
                 execution = "pallas"
                 regime = "stream" if regime is None else regime
+                self.selection = (
+                    "stream_fallback",
+                    "over budget but the strip scan cannot take this "
+                    "shape (bank/separable/cropping) -> pallas "
+                    "regime='stream'")
+        else:
+            self.selection = ("explicit",
+                              f"execution={execution!r} requested")
         self.execution = execution
 
         if execution == "sharded" and mesh is None:
@@ -337,9 +372,62 @@ class CompiledFilter:
             except Exception:
                 self.plan = None
 
-        self._fn = jax.jit(self._build())
+        impl = self._build()
+        scope = (f"repro.filter2d.{self.execution}"
+                 + (f".{self.regime}" if self.regime else ""))
+
+        def scoped(*call_args):
+            # named_scope is trace-time metadata (XLA op-name prefix):
+            # zero runtime cost, survives jax.export — see tpu-lowering CI
+            with jax.named_scope(scope):
+                return impl(*call_args)
+
+        with obs_profiler.annotate("repro.pipeline.compile"):
+            self._fn = jax.jit(scoped)
+
+        # one plane = H*W pixels; batch/channel planes all stream through
+        # the same compiled grid, so the per-call pixel count scales by M
+        planes = 1
+        if len(frame_shape) == 4:
+            planes = frame_shape[0] * frame_shape[3]
+        elif len(frame_shape) == 3:
+            planes = frame_shape[2]
+        self._pixels_per_call = self._H * self._W * planes
+        self._obs_key = (f"{self.execution}"
+                         f"{'/' + self.regime if self.regime else ''}"
+                         f"/{spec.dtype}/w{spec.window}"
+                         f"/{self._H}x{self._W}")
+        if obs_events.enabled():
+            self._emit_compile_events(requested,
+                                      time.perf_counter() - t_compile0)
 
     # -- planning helpers --------------------------------------------------
+
+    def _emit_compile_events(self, requested: str, wall_s: float) -> None:
+        if requested == "auto":
+            obs_events.emit(obs_events.AutoSelectEvent(
+                rule=self.selection[0], execution=self.execution,
+                reason=self.selection[1],
+                resident_vmem_bytes=int(self.resident_vmem_bytes),
+                vmem_budget=int(self.vmem_budget),
+                has_mesh=self.mesh is not None))
+        eb = ob = None
+        if self.execution == "pallas" and self.plan is not None:
+            eb, ob = K.plan_banks(self.plan,
+                                  num_filters=self.spec.num_filters,
+                                  overlap=self.overlap)
+        ws = self.vmem_working_set()
+        bpp = self.hbm_bytes_per_pixel()
+        obs_events.emit(obs_events.CompileEvent(
+            key=self._obs_key, spec=repr(self.spec),
+            spec_hash=hash(self.spec), frame_shape=self.frame_shape,
+            execution=self.execution, regime=self.regime,
+            strip_h=self.strip_h, tile_w=self.tile_w,
+            ext_banks=eb, out_banks=ob,
+            vmem_working_set=None if ws is None else int(ws),
+            hbm_bytes_per_pixel=None if bpp is None else float(bpp),
+            wall_ms=wall_s * 1e3))
+        obs_metrics.REGISTRY.counter("pipeline.compiles").inc()
 
     def _streaming_strip(self, dtype_bytes: int) -> int:
         """Largest divisor of H within the budget-derived strip height
@@ -515,8 +603,46 @@ class CompiledFilter:
             if gains is not None:
                 raise ValueError("gains supplied but the spec carries no "
                                  "requant epilogue")
-            return self._fn(frame, co)
-        return self._fn(frame, co, self._gain_operand(gains))
+            args = (frame, co)
+        else:
+            args = (frame, co, self._gain_operand(gains))
+        # the default path: one attribute test, then straight into the
+        # jitted executable — observability off costs a single branch
+        if obs_events._TRACE is None and self.profile_dump is None:
+            return self._fn(*args)
+        return self._instrumented_call(args)
+
+    def _instrumented_call(self, args):
+        """Timed execution: wall time via ``block_until_ready``, recompile
+        detection from the jit cache counter, one :class:`ExecuteEvent` +
+        a latency histogram sample per call. The operands stay exactly the
+        ones the fast path passes — nothing here enters the trace, so
+        tracing on adds zero retraces (pinned in test_compiled_filter)."""
+        dump = None
+        if self.profile_dump is not None and not self._profiled:
+            self._profiled = True          # capture the first call only
+            dump = self.profile_dump
+        size0 = self._fn._cache_size()
+        t0 = time.perf_counter()
+        with obs_profiler.profile_dump(dump):
+            with obs_profiler.annotate("repro.pipeline.call"):
+                y = jax.block_until_ready(self._fn(*args))
+        wall_s = time.perf_counter() - t0
+        size1 = self._fn._cache_size()
+        if obs_events._TRACE is not None:
+            wall_us = wall_s * 1e6
+            obs_events.emit(obs_events.ExecuteEvent(
+                key=self._obs_key, wall_us=wall_us,
+                pixels_per_s=self._pixels_per_call / wall_s,
+                cache_hit=size1 == size0, cache_size=size1))
+            reg = obs_metrics.REGISTRY
+            reg.histogram(f"call/{self._obs_key}").record(wall_us)
+            reg.counter("pipeline.calls").inc()
+            if size1 > size0:
+                reg.counter("pipeline.recompiles").inc()
+            else:
+                reg.counter("pipeline.cache_hits").inc()
+        return y
 
     # -- introspection -----------------------------------------------------
 
@@ -542,6 +668,137 @@ class CompiledFilter:
             return None
         return halo.hbm_bytes_per_pixel(self.plan)
 
+    def _plan_banks(self) -> Tuple[Optional[int], Optional[int]]:
+        """(halo-scratch, output-tile) bank counts of the planned kernel —
+        the double-buffering degree; ``(None, None)`` off the Pallas path."""
+        if self.execution != "pallas" or self.plan is None:
+            return None, None
+        return K.plan_banks(self.plan, num_filters=self.spec.num_filters,
+                            overlap=self.overlap)
+
+    def explain(self, as_dict: bool = False):
+        """The plan report: what compiled, why, and what it should cost.
+
+        Every byte figure here IS the existing static accounting —
+        ``vmem_working_set()`` / ``hbm_bytes_per_pixel()`` /
+        ``halo.read_amplification`` — restated, not re-derived (pinned to
+        exact agreement in ``tests/test_obs.py``), plus the two-ceiling
+        roofline prediction from :mod:`repro.obs.roofline`. ``as_dict=True``
+        returns the machine-readable twin the bench harness consumes.
+        """
+        spec, plan = self.spec, self.plan
+        eb, ob = self._plan_banks()
+        ws = self.vmem_working_set()
+        bpp = self.hbm_bytes_per_pixel()
+        macs = macs_per_pixel(spec.window, form=spec.form,
+                              separable=spec.separable)
+        flops = 2.0 * macs * spec.num_filters
+        roof = obs_roofline.predicted_pixel_rate(flops, bpp)
+        d = {
+            "spec": {
+                "window": spec.window, "form": spec.form,
+                "border": spec.border.policy, "separable": spec.separable,
+                "num_filters": spec.num_filters, "dtype": spec.dtype,
+                "requant": None if spec.requant is None
+                           else repr(spec.requant),
+            },
+            "frame": {"shape": self.frame_shape,
+                      "pixels_per_call": self._pixels_per_call},
+            "execution": {"executor": self.execution, "regime": self.regime,
+                          "rule": self.selection[0],
+                          "why": self.selection[1],
+                          "overlap": self.overlap,
+                          "interpret": self.interpret},
+            "geometry": None if plan is None else {
+                "strip_h": self.strip_h, "tile_w": self.tile_w,
+                "strips": plan.rows.n, "tiles": plan.cols.n,
+                "ext_banks": eb, "out_banks": ob,
+                "scratch_eh": plan.eh, "scratch_ew": plan.ew,
+            },
+            "vmem": {
+                "working_set_bytes": None if ws is None else int(ws),
+                "budget_bytes": int(self.vmem_budget),
+                "resident_estimate_bytes": int(self.resident_vmem_bytes),
+                "fits_budget": None if ws is None
+                               else bool(ws <= self.vmem_budget),
+            },
+            "hbm": None if plan is None else {
+                "read_bytes_per_pixel": halo.read_bytes_per_pixel(plan),
+                "write_bytes_per_pixel":
+                    halo.hbm_write_bytes_per_pixel(plan),
+                "bytes_per_pixel": bpp,
+                "read_amplification": halo.read_amplification(plan),
+            },
+            "roofline": roof,
+        }
+        if as_dict:
+            return d
+        return self._render_explain(d)
+
+    def _render_explain(self, d) -> str:
+        def _b(n):
+            if n is None:
+                return "n/a"
+            return (f"{n / 2**20:.2f} MiB" if n >= 2**20
+                    else f"{n / 2**10:.1f} KiB" if n >= 2**10
+                    else f"{n} B")
+        s, e, g, v, h, r = (d["spec"], d["execution"], d["geometry"],
+                            d["vmem"], d["hbm"], d["roofline"])
+        lines = [
+            f"CompiledFilter: {s['window']}x{s['window']} "
+            + ("separable " if s["separable"] else "")
+            + f"{s['form']} filter"
+            + (f" bank[{s['num_filters']}]" if s["num_filters"] > 1 else "")
+            + f", {s['dtype']}, border={s['border']}"
+            + (f", requant={s['requant']}" if s["requant"] else ""),
+            f"  frame     {d['frame']['shape']} "
+            f"({d['frame']['pixels_per_call']} px/call)",
+            f"  executor  {e['executor']}"
+            + (f" regime={e['regime']!r}" if e["regime"] else "")
+            + f" [{e['rule']}] — {e['why']}",
+        ]
+        if g is not None:
+            lines.append(
+                f"  geometry  {g['strips']} strips x {g['tiles']} tiles "
+                f"(strip_h={g['strip_h']}, tile_w={g['tile_w']}), scratch "
+                f"{g['scratch_eh']}x{g['scratch_ew']}"
+                + (f", banks ext={g['ext_banks']} out={g['out_banks']}"
+                   if g["ext_banks"] is not None else ""))
+        lines.append(
+            f"  vmem      working set {_b(v['working_set_bytes'])} of "
+            f"{_b(v['budget_bytes'])} budget"
+            + ("" if v["fits_budget"] is None
+               else " (fits)" if v["fits_budget"] else " (OVER)")
+            + f"; frame-resident est. {_b(v['resident_estimate_bytes'])}")
+        if h is not None:
+            lines.append(
+                f"  hbm       {h['bytes_per_pixel']:.3f} B/px round trip "
+                f"(read {h['read_bytes_per_pixel']:.3f} + write "
+                f"{h['write_bytes_per_pixel']:.3f}), read amplification "
+                f"{h['read_amplification']:.4f}x")
+        lines.append(
+            f"  roofline  {r['predicted_pixels_per_s']:.3e} px/s "
+            f"({r['bound']}-bound; {r['flops_per_pixel']:.0f} flop/px, "
+            + (f"{r['bytes_per_pixel']:.3f} B/px)" if r["bytes_per_pixel"]
+               is not None else "bytes unknown)"))
+        return "\n".join(lines)
+
+    def _explain_line(self) -> str:
+        """One-line plan summary (folded into ``__repr__``)."""
+        eb, ob = self._plan_banks()
+        bits = [self._obs_key, f"rule={self.selection[0]}"]
+        if self.plan is not None:
+            bits.append(f"{self.plan.rows.n}x{self.plan.cols.n} grid")
+        if eb is not None:
+            bits.append(f"banks ext={eb} out={ob}")
+        ws = self.vmem_working_set()
+        if ws is not None:
+            bits.append(f"vmem {ws}/{self.vmem_budget} B")
+        bpp = self.hbm_bytes_per_pixel()
+        if bpp is not None:
+            bits.append(f"{bpp:.2f} B/px")
+        return " | ".join(bits)
+
     def __repr__(self) -> str:
         geo = ""
         if self.execution == "pallas":
@@ -550,4 +807,5 @@ class CompiledFilter:
         elif self.execution == "streaming":
             geo = f", strip_h={self.strip_h}"
         return (f"CompiledFilter({self.spec!r}, frame={self.frame_shape}, "
-                f"execution={self.execution!r}{geo})")
+                f"execution={self.execution!r}{geo})"
+                f"\n  <{self._explain_line()}>")

@@ -52,6 +52,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.border_spec import BorderSpec, min_extent, quantize_constant
 from repro.core.requant import RequantSpec
+from repro.obs import events as obs_events
 
 LANE = 128  # TPU lane width: last-dim alignment target
 
@@ -272,6 +273,19 @@ def derive_strip_tile(H: int, W: int, w: int, *, dtype=np.float32,
     wo_pad = Wo + (-Wo) % LANE
     banks = 2 if overlap else 1
 
+    def _traced(s: int, t: int, cands=(), why: str = "") -> Tuple[int, int]:
+        # decision-trace emission: the candidate scan and the winner land
+        # as one PlanEvent when observability is on; pure pass-through off
+        if obs_events.enabled():
+            obs_events.emit(obs_events.PlanEvent(
+                H=int(H), W=int(W), window=int(w),
+                dtype=np.dtype(dtype).name, vmem_budget=int(vmem_budget),
+                overlap=bool(overlap),
+                candidates=tuple((int(ct), int(cs), float(ca))
+                                 for ct, cs, ca in cands),
+                strip_h=int(s), tile_w=int(t), why=why))
+        return s, t
+
     def max_strip(tile: int) -> int:
         ew = tile + 2 * r
         ew += (-ew) % LANE
@@ -290,8 +304,11 @@ def derive_strip_tile(H: int, W: int, w: int, *, dtype=np.float32,
     if tile_w is not None:
         tile = max(min(tile_w + (-tile_w) % LANE, wo_pad), LANE)
         if strip_h is not None:
-            return max(min(int(strip_h), Ho), 1), int(tile)
-        return clamp_strip(max_strip(tile)), int(tile)
+            return _traced(max(min(int(strip_h), Ho), 1), int(tile),
+                           why="caller fixed both knobs (clamped to frame)")
+        return _traced(clamp_strip(max_strip(tile)), int(tile),
+                       why=f"caller fixed tile_w={int(tile)}: deepest "
+                           "strip the banked budget holds at that width")
 
     if strip_h is not None:
         # fixed strip: widest tile whose banked budget holds that many rows
@@ -299,7 +316,9 @@ def derive_strip_tile(H: int, W: int, w: int, *, dtype=np.float32,
         tile = wo_pad
         while max_strip(tile) < want and tile > LANE:
             tile = max(LANE, tile // 2 - (tile // 2) % LANE)
-        return max(min(int(strip_h), Ho), 1), int(tile)
+        return _traced(max(min(int(strip_h), Ho), 1), int(tile),
+                       why=f"caller fixed strip_h={int(strip_h)}: widest "
+                           "tile whose banked budget holds that depth")
 
     cands = []                            # widest tile first
     tile = wo_pad
@@ -313,7 +332,10 @@ def derive_strip_tile(H: int, W: int, w: int, *, dtype=np.float32,
     best = min(a for _, _, a in cands)
     for tile, s, amp in cands:
         if amp <= best * 1.02:            # widest within 2% of optimal
-            return s, int(tile)
+            return _traced(s, int(tile), cands=cands,
+                           why=f"widest tile within 2% of the minimum "
+                               f"read amplification ({best:.4f}) over "
+                               f"{len(cands)} lane-aligned candidates")
     raise AssertionError("unreachable: best candidate always qualifies")
 
 

@@ -137,9 +137,12 @@ def _filter2d_pallas_planes(planes: jax.Array, coeffs: jax.Array,
     # and the requant spec (when set) makes the write side narrow too.
     plan = halo.make_plan(H, W, w, border, S, Tw, dtype=planes.dtype,
                           requant=requant)
-    y = K.filter2d_halo(planes, coeffs, plan, q_params=q_params, form=form,
-                        interpret=interpret, overlap=overlap,
-                        grid_order=grid_order)
+    # trace-time op-name prefix only (profiler/HLO readability):
+    # named_scope costs nothing at runtime and survives jax.export
+    with jax.named_scope(f"repro.filter2d.pallas.{regime}"):
+        y = K.filter2d_halo(planes, coeffs, plan, q_params=q_params,
+                            form=form, interpret=interpret, overlap=overlap,
+                            grid_order=grid_order)
     return y[:, :, :Ho, :Wo]
 
 

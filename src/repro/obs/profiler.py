@@ -1,0 +1,44 @@
+"""``jax.profiler`` hooks, gated on the obs switch.
+
+Two layers of annotation, matching where they cost something:
+
+  * :func:`annotate` — a host-side ``jax.profiler.TraceAnnotation``
+    context for plan/compile/call phases. Returns a ``nullcontext`` when
+    observability is off, so the default path pays one branch.
+  * ``jax.named_scope`` — used *inside* jitted impls (see
+    ``core/pipeline.py`` / ``kernels/filter2d/ops.py``). Those are pure
+    trace-time metadata (XLA op name prefixes): zero runtime cost, so
+    they are unconditional — and the tpu-lowering CI lane proves they
+    survive ``jax.export``.
+  * :func:`profile_dump` — the opt-in capture knob
+    (``Filter2D.compile(..., profile_dump=dir)``): wraps one call in
+    ``jax.profiler.trace(dir)`` so the XLA/TensorBoard trace lands on
+    disk without the caller touching the profiler API.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from repro.obs import events as _events
+
+__all__ = ["annotate", "profile_dump"]
+
+
+def annotate(name: str):
+    """TraceAnnotation context when observability is on; no-op when off."""
+    if not _events.enabled():
+        return contextlib.nullcontext()
+    import jax.profiler
+    return jax.profiler.TraceAnnotation(name)
+
+
+@contextlib.contextmanager
+def profile_dump(log_dir: Optional[str]):
+    """``jax.profiler.trace`` into ``log_dir`` (no-op when ``None``)."""
+    if log_dir is None:
+        yield
+        return
+    import jax.profiler
+    with jax.profiler.trace(str(log_dir)):
+        yield

@@ -1,0 +1,49 @@
+"""Analytic roofline arithmetic + the peak constants it is stated in.
+
+One source of truth for the TPU v5e peak numbers the whole repo quotes:
+``benchmarks/common.py`` re-exports these (it historically owned them),
+``CompiledFilter.explain()`` derives its predicted pixel rate from them,
+and the ROADMAP's measured-autotune item will calibrate against them.
+The model is the classic two-ceiling roofline (the dace ``RooflineModel``
+pattern): a kernel that issues ``f`` flops and moves ``b`` HBM bytes per
+output pixel sustains at most ``min(PEAK_FLOPS / f, HBM_BW / b)``
+pixels/s — the filter datapaths here are firmly memory-bound, which is
+why every tentpole so far attacked bytes/pixel rather than MACs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "predicted_pixel_rate"]
+
+# TPU v5e targets (per brief) — used for analytic pixel-rate derivations
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def predicted_pixel_rate(flops_per_pixel: float,
+                         bytes_per_pixel: Optional[float],
+                         peak_flops: float = PEAK_FLOPS,
+                         hbm_bw: float = HBM_BW) -> Dict[str, float]:
+    """Both roofline ceilings and the binding one, per output pixel.
+
+    Returns ``compute_bound_pixels_per_s``, ``memory_bound_pixels_per_s``
+    (``inf`` when the respective cost is zero/unknown), the ``min`` of the
+    two as ``predicted_pixels_per_s``, and ``bound`` naming the ceiling.
+    """
+    compute = (peak_flops / flops_per_pixel if flops_per_pixel
+               else float("inf"))
+    memory = (hbm_bw / bytes_per_pixel if bytes_per_pixel
+              else float("inf"))
+    return {
+        "flops_per_pixel": float(flops_per_pixel),
+        "bytes_per_pixel": (float(bytes_per_pixel)
+                            if bytes_per_pixel else None),
+        "compute_bound_pixels_per_s": compute,
+        "memory_bound_pixels_per_s": memory,
+        "predicted_pixels_per_s": min(compute, memory),
+        "bound": "compute" if compute < memory else "memory",
+        "peak_flops": float(peak_flops),
+        "hbm_bw": float(hbm_bw),
+    }

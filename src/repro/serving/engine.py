@@ -16,6 +16,7 @@ max_tokens; a new wave is admitted when the current one drains.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -25,6 +26,8 @@ import numpy as np
 
 from repro.configs.base import RunConfig
 from repro.models import registry
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass
@@ -59,6 +62,8 @@ class ServeEngine:
                                                          shd=shd))
 
     def submit(self, req: Request):
+        if obs_events.enabled():
+            obs_metrics.REGISTRY.counter("serve.requests").inc()
         self.queue.append(req)
 
     def _admit_wave(self):
@@ -81,14 +86,24 @@ class ServeEngine:
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(wave):
             toks[i, S - len(r.prompt):] = r.prompt
+        t0 = time.perf_counter() if obs_events.enabled() else None
         logits, caches = self._prefill(self.params, {"inputs":
                                                      jnp.asarray(toks)})
+        if t0 is not None:
+            jax.block_until_ready(logits)
+            reg = obs_metrics.REGISTRY
+            reg.histogram("serve/prefill_us").record(
+                (time.perf_counter() - t0) * 1e6)
+            reg.counter("serve.waves").inc()
         self.caches = caches
         self.active = wave
         self.cur = S + self.rc.model.num_meta_tokens
         nxt = np.asarray(jnp.argmax(logits, -1))
         for i, r in enumerate(wave):
             r.out_tokens.append(int(nxt[i]))
+        if obs_events.enabled():
+            obs_metrics.REGISTRY.counter("serve.tokens_emitted").inc(
+                len(wave))
         self._last = nxt
         return True
 
@@ -99,11 +114,17 @@ class ServeEngine:
             tok = np.zeros((B, 1), np.int32)
             for i, r in enumerate(self.active):
                 tok[i, 0] = r.out_tokens[-1]
+            t0 = time.perf_counter() if obs_events.enabled() else None
             logits, self.caches = self._decode(
                 self.params, jnp.asarray(tok), self.caches,
                 jnp.asarray(self.cur, jnp.int32))
             self.cur += 1
             nxt = np.asarray(jnp.argmax(logits, -1))
+            if t0 is not None:
+                reg = obs_metrics.REGISTRY
+                reg.histogram("serve/decode_step_us").record(
+                    (time.perf_counter() - t0) * 1e6)
+                reg.counter("serve.decode_steps").inc()
             alldone = True
             for i, r in enumerate(self.active):
                 if r.done or len(r.out_tokens) >= r.max_new_tokens:
@@ -111,6 +132,9 @@ class ServeEngine:
                     continue
                 t = int(nxt[i])
                 r.out_tokens.append(t)
+                if obs_events.enabled():
+                    obs_metrics.REGISTRY.counter(
+                        "serve.tokens_emitted").inc()
                 if r.eos_id is not None and t == r.eos_id:
                     r.done = True
                 alldone = alldone and r.done

@@ -261,3 +261,72 @@ def test_cli_end_to_end_regression(tmp_path):
     cur.write_text(json.dumps(cur_payload))
     assert main(["--baseline", str(base), "--current", str(cur)]) == 1
     assert main(["--baseline", str(base), "--current", str(base)]) == 0
+
+
+# -- latency-spread keys + the noisy downgrade ------------------------------
+
+
+def test_latency_keys_neither_fail_nor_reseed():
+    """``common.Timing`` stamps p50/p90/p99/iqr (and sometimes ``noisy``)
+    onto timed rows; a baseline that predates them must stay comparable —
+    measurement metadata is not a geometry descriptor."""
+    base = _payload([_row("pallas_halo/direct/mirror")])
+    cur = _payload([_row("pallas_halo/direct/mirror", p50_us=100.0,
+                         p90_us=120.0, p99_us=130.0, iqr_us=5.0)])
+    failures, notes = compare(base, cur)
+    assert failures == []
+    assert not any("re-seeds" in n for n in notes)
+    assert unknown_keys(base["rows"][0], cur["rows"][0]) == []
+
+
+def test_noisy_row_downgrades_rate_regression_to_warning():
+    """A rate regression on a row the run itself flagged unstable
+    (IQR/median over threshold) warns instead of failing: a noisy timing
+    cannot convict."""
+    base = _payload([_row("r")])
+    cur = _payload([_row("r", rate=0.5e6, noisy=1.0,
+                         p50_us=200.0, iqr_us=90.0)])
+    failures, notes = compare(base, cur)
+    assert failures == []
+    assert any("WARN ONLY" in n and "noisy" in n for n in notes)
+
+
+def test_noisy_row_still_fails_on_bytes():
+    """``noisy`` excuses *timed* metrics only: the analytic byte metrics
+    come from the static plan, so they fail regardless of timing noise."""
+    base = _payload([_row("r", bpp=2.05)])
+    cur = _payload([_row("r", bpp=5.05, noisy=1.0)])
+    failures, _ = compare(base, cur)
+    assert any("hbm_bytes_per_pixel" in f for f in failures)
+
+
+def test_quiet_row_regression_still_fails():
+    """Without the noisy flag the gate bites exactly as before."""
+    base = _payload([_row("r")])
+    cur = _payload([_row("r", rate=0.5e6, p50_us=200.0, iqr_us=1.0)])
+    failures, _ = compare(base, cur)
+    assert len(failures) == 1 and "pixels_per_s" in failures[0]
+
+
+def test_timing_carries_spread_and_noisy_flag():
+    """The producing side: ``time_call``'s Timing is a float (median)
+    whose row() stamp round-trips through the run.py row parser."""
+    from benchmarks.common import NOISY_IQR_FRACTION, Timing, row
+    from benchmarks.run import _row_record
+
+    quiet = Timing([100.0, 101.0, 99.0, 100.5, 100.2])
+    assert float(quiet) == quiet.p50_us
+    assert not quiet.noisy
+    med, iqr = quiet                       # tuple-unpack protocol
+    assert med == float(quiet) and iqr == quiet.iqr_us
+
+    noisy = Timing([100.0, 100.0, 300.0, 100.0, 500.0])
+    assert noisy.iqr_us > NOISY_IQR_FRACTION * float(noisy)
+    assert noisy.noisy
+
+    rec = _row_record(row("r", noisy, "pixels_per_s=1.0e6"))
+    assert rec["pixels_per_s"] == 1.0e6
+    assert rec["noisy"] == 1.0
+    assert rec["p50_us"] == round(noisy.p50_us, 1)
+    rec_q = _row_record(row("r", quiet))
+    assert "noisy" not in rec_q and "p99_us" in rec_q

@@ -365,3 +365,68 @@ def test_call_validation(rng):
     with pytest.raises(ValueError, match="disagrees with the compiled"):
         cfi(jnp.zeros((H, W), jnp.int8), jnp.ones((5, 5), jnp.int32),
             gains=RequantSpec(multiplier=1, shift=4, dtype="int16"))
+
+
+# ---------------------------------------------------------------------------
+# The no-retrace contract holds with tracing ENABLED
+# ---------------------------------------------------------------------------
+
+
+def test_swaps_zero_recompiles_with_tracing_enabled(rng):
+    """Observability must not perturb what it observes: with obs tracing
+    on, coefficient / factor / gain swaps still pin cache_size() == 1,
+    each pipeline emits exactly ONE compile event, and every post-warmup
+    execute event reports a cache hit. (Fresh strip_h knobs throughout:
+    the compile memo cache is process-wide, and a memo hit would
+    legitimately emit no compile event.)"""
+    from repro import obs
+    obs.disable()
+    obs.REGISTRY.reset()
+    try:
+        obs.enable()
+        # coefficients
+        x = jnp.asarray(_frame(rng, np.float32))
+        cf = Filter2D(window=5).compile(x, "pallas", strip_h=16, tile_w=128)
+        assert len(obs.events.events(kind="compile")) == 1
+        cf(x, jnp.asarray(filters.gaussian(5)))
+        assert cf.cache_size() == 1
+        cf(x, jnp.asarray(filters.log_filter(5)))
+        assert cf.cache_size() == 1, "coefficient swap retraced under obs"
+
+        # separable factors
+        sf = Filter2D(window=3, separable=True).compile(x, "pallas",
+                                                        strip_h=16,
+                                                        tile_w=128)
+        assert len(obs.events.events(kind="compile")) == 2
+        g = np.array([0.25, 0.5, 0.25], np.float32)
+        sf(x, (g, g))
+        sf(x, (np.full(3, 1 / 3, np.float32),) * 2)
+        assert sf.cache_size() == 1, "factor swap retraced under obs"
+
+        # requant gains
+        xi = jnp.asarray(_frame(rng, np.int8))
+        rq = RequantSpec(multiplier=3, shift=7, rounding="nearest",
+                         dtype="int8")
+        gf = Filter2D(window=5, dtype="int8",
+                      requant=rq.gain_free()).compile(xi, "pallas",
+                                                      strip_h=16,
+                                                      tile_w=128)
+        assert len(obs.events.events(kind="compile")) == 3
+        ki = jnp.asarray(_kernel(rng, np.int8))
+        gf(xi, ki, gains=rq)
+        gf(xi, ki, gains=RequantSpec(multiplier=-5, shift=9,
+                                     rounding="nearest", dtype="int8"))
+        assert gf.cache_size() == 1, "gain swap retraced under obs"
+
+        # still exactly one compile event per pipeline, and no execute
+        # event after a pipeline's first reported a cache miss
+        assert len(obs.events.events(kind="compile")) == 3
+        seen = {}
+        for e in obs.events.events(kind="execute"):
+            if e.key in seen:
+                assert e.cache_hit, f"{e.key}: swap call missed the cache"
+                assert e.cache_size == 1
+            seen[e.key] = e
+    finally:
+        obs.disable()
+        obs.REGISTRY.reset()

@@ -13,6 +13,7 @@ REPRO_ALL = [
     "CompiledFilter",
     "Filter2D",
     "RequantSpec",
+    "obs",
 ]
 
 CORE_ALL = [

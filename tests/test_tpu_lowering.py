@@ -271,3 +271,33 @@ def test_swattn_lowers():
         _sds((1, 256, 4, 64), jnp.float32), _sds((1, 256, 2, 64),
                                                  jnp.float32),
         _sds((1, 256, 2, 64), jnp.float32))
+
+
+def test_compiled_filter_lowers_with_tracing_enabled():
+    """The obs satellite: with tracing ON, the pipeline still exports —
+    the named_scope / TraceAnnotation hooks are host-side or trace-time
+    metadata, never ops jax.export can't serialise — and the compile is
+    observable (exactly one compile event for the fresh geometry)."""
+    from repro import obs
+    from repro.core.pipeline import Filter2D
+    obs.disable()
+    try:
+        obs.enable()
+        # fresh strip_h: a compile-memo hit would emit no compile event
+        spec = Filter2D(window=5)
+        cf = spec.compile(jax.ShapeDtypeStruct((128, 256), jnp.float32),
+                          "pallas", strip_h=32, tile_w=128,
+                          interpret=False)
+        assert len(obs.events.events(kind="compile")) == 1
+        try:
+            exp = jax_export.export(cf._fn, platforms=("tpu",))(
+                FRAME, K5)
+        except Exception as e:  # noqa: BLE001
+            pytest.fail(f"tracing-enabled lowering failed: "
+                        f"{type(e).__name__}: {e}")
+        assert "tpu_custom_call" in exp.mlir_module()
+        # the named_scope annotation rode into the exported module
+        assert "repro.filter2d" in exp.mlir_module()
+    finally:
+        obs.disable()
+        obs.REGISTRY.reset()
