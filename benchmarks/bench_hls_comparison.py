@@ -13,7 +13,6 @@ import numpy as np
 
 from benchmarks.common import hlo_costs, row, time_call
 from repro.core import filters
-from repro.core.borders import BorderSpec
 from repro.core.filter2d import filter2d, filter2d_xla
 
 H, W = 1080, 1920

@@ -7,7 +7,7 @@ from __future__ import annotations
 import json
 import os
 
-from benchmarks.common import HBM_BW, PEAK_FLOPS, row
+from benchmarks.common import row
 from repro.configs.base import (ARCH_IDS, get_model_config, resolve,
                                 supported_shapes)
 

@@ -14,7 +14,7 @@ from benchmarks.common import HBM_BW, row, time_call
 from repro.core import filters
 from repro.core.borders import BorderSpec
 from repro.core.filter2d import filter2d
-from repro.core.streaming import filter2d_streaming, strip_height_for_vmem
+from repro.core.streaming import strip_height_for_vmem
 from repro.kernels.filter2d import stream_vmem_working_set
 
 

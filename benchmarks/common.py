@@ -7,7 +7,7 @@ them so existing bench code keeps reading ``common.PEAK_FLOPS`` etc.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import numpy as np

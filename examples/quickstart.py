@@ -8,8 +8,8 @@ policies, the streaming row-buffer executor, and the Pallas kernel path.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (BorderSpec, CoefficientFile, FORMS, default_bank,
-                        filter2d, filter2d_streaming, preset)
+from repro.core import (BorderSpec, FORMS, default_bank, filter2d, 
+                        filter2d_streaming, preset)
 from repro.data import SyntheticFrames
 from repro.kernels.filter2d import filter2d_pallas
 

@@ -12,7 +12,14 @@ adaptivity argument the paper makes against fixed-coefficient HLS
 filters. Also demonstrates the distributed row-sharded executor when
 multiple devices are available.
 
-  PYTHONPATH=src python examples/video_pipeline.py [--frames 24]
+With ``--serve`` the output pass routes through the batched
+:class:`repro.serving.FilterServeEngine` instead of calling the compiled
+pipeline inline: frames are submitted as requests (the scene-adaptive
+coefficient swap rides the same zero-recompile contract, now per
+request) and a background worker overlaps batching/copy-out with device
+compute — the deployment shape of docs/serving.md.
+
+  PYTHONPATH=src python examples/video_pipeline.py [--frames 24] [--serve]
 """
 import argparse
 import time
@@ -24,6 +31,7 @@ import numpy as np
 from repro import BorderSpec, Filter2D
 from repro.core import decompose_separable, default_bank
 from repro.data import video_stream
+from repro.serving import FilterServeEngine
 
 
 def main():
@@ -36,6 +44,12 @@ def main():
                     help="executor for both pipelines ('pallas' runs the "
                          "column-tiled streaming kernel; interpret mode "
                          "off-TPU)")
+    ap.add_argument("--serve", action="store_true",
+                    help="route the output pass through FilterServeEngine "
+                         "(batched waves, background worker) instead of "
+                         "inline CompiledFilter calls")
+    ap.add_argument("--serve-batch", type=int, default=4,
+                    help="engine wave size with --serve")
     args = ap.parse_args()
 
     cf = default_bank(w_max=7, num_slots=8)
@@ -61,10 +75,25 @@ def main():
     print(f"[video] compiled: out={out_pipe!r}")
     print(f"[video] compiled: sep={sep_pipe!r}")
 
+    out_spec = Filter2D(window=7, border=border)
+    sep_spec = Filter2D(window=7, border=border, separable=True)
+    engine = None
+    if args.serve:
+        engine = FilterServeEngine(batch_size=args.serve_batch,
+                                   execution=args.execution)
+        # warm both output buckets so the timed loop never compiles
+        engine.submit(np.zeros(shape, np.float32), cf.read(0),
+                      spec=out_spec, tenant="video")
+        engine.submit(np.zeros(shape, np.float32),
+                      decompose_separable(np.asarray(cf.read(1))),
+                      spec=sep_spec, tenant="video")
+        engine.drain()
+
     active_slot = 0
     t0 = time.perf_counter()
     px = sep_frames = 0
     prev_mean = None
+    served = []
     for i in range(args.frames):
         frame = jnp.asarray(next(stream)[..., 0])
         # one pass applies the whole bank (the coefficient file)
@@ -77,12 +106,20 @@ def main():
         k = cf.read(active_slot)
         uv = decompose_separable(np.asarray(k))
         if uv is not None:      # rank-1 slot: 2w MACs/pixel instead of w²
-            out = sep_pipe(frame, uv)
             sep_frames += 1
+            if engine is not None:   # async: the worker batches + overlaps
+                served.append(engine.submit(frame, uv, spec=sep_spec,
+                                            tenant="video"))
+            else:
+                jax.block_until_ready(sep_pipe(frame, uv))
+        elif engine is not None:
+            served.append(engine.submit(frame, k, spec=out_spec,
+                                        tenant="video"))
         else:
-            out = out_pipe(frame, k)
-        jax.block_until_ready(out)
+            jax.block_until_ready(out_pipe(frame, k))
         px += frame.size
+    if engine is not None:
+        engine.drain()
     dt = time.perf_counter() - t0
     print(f"[video] {args.frames} frames {args.height}x{args.width}, "
           f"{px / dt / 1e6:.1f} Mpix/s on CPU "
@@ -92,6 +129,13 @@ def main():
           f"bank={bank_pipe.cache_size() - 1}, "
           f"out={max(out_pipe.cache_size() - 1, 0)}, "
           f"sep={max(sep_pipe.cache_size() - 1, 0)}  <- swapping is free")
+    if engine is not None:
+        st = engine.stats()
+        engine.shutdown()
+        assert all(r.done() for r in served)
+        print(f"[video] served {st['completed']} requests in {st['waves']} "
+              f"waves (batch {args.serve_batch}); engine recompiles="
+              f"{st['recompiles']} across every coefficient swap")
 
     n_dev = jax.device_count()
     if n_dev > 1:

@@ -7,10 +7,12 @@ structure with :class:`Filter2D` (+ :class:`BorderSpec` /
 frames with runtime-swappable coefficients and gains through the returned
 :class:`CompiledFilter`. ``repro.obs`` is the observability subsystem
 (``obs.enable()`` for plan/compile/execute tracing, counters, profiler
-hooks — see docs/observability.md). ``__all__`` is pinned by
+hooks — see docs/observability.md); ``repro.serving`` is the batched
+multi-tenant serving layer over the same front door (``FilterServeEngine``
+— see docs/serving.md). ``__all__`` is pinned by
 tests/test_public_api.py.
 """
-from repro import obs
+from repro import obs, serving
 from repro.core.border_spec import BorderSpec
 from repro.core.pipeline import CompiledFilter, Filter2D
 from repro.core.requant import RequantSpec
@@ -21,4 +23,5 @@ __all__ = [
     "Filter2D",
     "RequantSpec",
     "obs",
+    "serving",
 ]

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Shapes (assigned): seq_len x global_batch cells.

@@ -8,7 +8,6 @@ exercised only via the dry-run (ShapeDtypeStruct, no allocation).
 """
 from __future__ import annotations
 
-import dataclasses
 
 from repro.configs.base import ModelConfig, get_model_config
 

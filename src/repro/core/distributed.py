@@ -14,12 +14,11 @@ must not disturb the (sharded) stream.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.border_spec import quantize_constant

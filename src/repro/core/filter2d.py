@@ -29,7 +29,7 @@ from __future__ import annotations
 import functools
 import math
 import warnings
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

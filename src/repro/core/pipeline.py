@@ -32,8 +32,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import time
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -809,3 +810,97 @@ class CompiledFilter:
         return (f"CompiledFilter({self.spec!r}, frame={self.frame_shape}, "
                 f"execution={self.execution!r}{geo})"
                 f"\n  <{self._explain_line()}>")
+
+
+# -- batch admission (the serving engine's substrate) -----------------------
+#
+# A compiled pipeline already folds batch and channel planes into the
+# kernel grid ([B, H, W, C] frames stream as B*C planes through one
+# executable), which is exactly the degree of freedom a *serving* layer
+# wants: k independent same-geometry requests stack into the plane grid
+# dim of ONE dispatch. These helpers are the admission arithmetic —
+# stable bucket identity, stacking with zero-padding to a static batch
+# (one executable per bucket, like the LM engines' fixed slot count),
+# and the inverse split — kept next to the front door so the geometry
+# rules live in one place.
+
+
+def batched_shape(frame_shape: Sequence[int], batch: int) -> Tuple[int, ...]:
+    """The [B, H, W, C] pipeline geometry a wave of ``batch`` frames of
+    ``frame_shape`` ([H, W] or [H, W, C]) compiles for. Already-batched
+    4-D shapes are rejected: the batch dim belongs to the admission
+    layer, not the request."""
+    shape = tuple(int(s) for s in frame_shape)
+    if len(shape) == 2:
+        shape = shape + (1,)
+    if len(shape) != 3:
+        raise ValueError("serving frames are [H, W] or [H, W, C]; got "
+                         f"shape {tuple(frame_shape)}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1; got {batch}")
+    return (int(batch),) + shape
+
+
+def bucket_key(spec: Filter2D, frame_shape: Sequence[int], *,
+               batch: int = 1, execution: str = "auto",
+               vmem_budget: Optional[int] = None, overlap: bool = True,
+               interpret: Optional[bool] = None) -> str:
+    """Stable digest naming one warm-cache bucket: the (spec, frame
+    geometry, dtype) identity plus every compile knob that shapes the
+    executable. Two requests with equal keys are servable by the same
+    ``CompiledFilter``; anything that would compile fresh — a different
+    window, border, storage dtype, geometry, batch or executor knob —
+    changes the key. (``Filter2D`` reprs are value-complete, so the
+    digest is deterministic within a process and across processes.)"""
+    shape = batched_shape(frame_shape, batch)
+    payload = (repr(spec), shape, execution, vmem_budget, bool(overlap),
+               interpret)
+    return hashlib.sha1(repr(payload).encode()).hexdigest()[:16]
+
+
+def admit_batch(frames: Sequence, batch: int):
+    """Stack up to ``batch`` same-geometry frames into the [B, H, W, C]
+    plane-grid layout (``batched_shape``), zero-padding the tail so the
+    dispatch shape is static — a light wave must not compile a second
+    executable. Returns the stacked array; callers split results back
+    with :func:`split_batch`."""
+    if not frames:
+        raise ValueError("admit_batch needs at least one frame")
+    if len(frames) > batch:
+        raise ValueError(f"wave of {len(frames)} frames exceeds the "
+                         f"batch size {batch}")
+    shape = tuple(frames[0].shape)
+    dtype = jnp.dtype(frames[0].dtype)
+    for f in frames[1:]:
+        if tuple(f.shape) != shape:
+            raise ValueError("waves are same-geometry by construction: "
+                             f"got {tuple(f.shape)} in a {shape} wave")
+        if jnp.dtype(f.dtype) != dtype:
+            raise ValueError("waves are same-dtype by construction (jnp."
+                             f"stack would silently promote): got "
+                             f"{jnp.dtype(f.dtype)} in a {dtype} wave")
+    x = jnp.stack([jnp.asarray(f) for f in frames])
+    if x.ndim == 3:
+        x = x[..., None]
+    if x.ndim != 4:
+        raise ValueError("serving frames are [H, W] or [H, W, C]; got "
+                         f"shape {shape}")
+    if len(frames) < batch:
+        pad = jnp.zeros((batch - len(frames),) + x.shape[1:], x.dtype)
+        x = jnp.concatenate([x, pad])
+    return x
+
+
+def split_batch(y, count: int, frame_ndim: int) -> List:
+    """Undo :func:`admit_batch` on a pipeline output: the first ``count``
+    planes (padding dropped), each squeezed back to the request's rank —
+    2-D requests lose the synthesised channel axis; bank pipelines keep
+    their trailing bank axis."""
+    outs = []
+    for i in range(count):
+        yi = y[i]
+        if frame_ndim == 2:
+            # [H, W, 1] or [H, W, 1, N] -> [H, W] / [H, W, N]
+            yi = yi[:, :, 0]
+        outs.append(yi)
+    return outs

@@ -31,8 +31,8 @@ import jax.numpy as jnp
 
 from repro.core.border_spec import quantize_constant
 from repro.core.borders import BorderSpec, gather_rows
-from repro.core.filter2d import (FORMS, _FORM_FNS, _as_nhwc, _filter2d_impl,
-                                 _un_nhwc, apply_requant_params,
+from repro.core.filter2d import (_FORM_FNS, _as_nhwc, _filter2d_impl, 
+                                 _un_nhwc, apply_requant_params, 
                                  is_fixed_point, resolve_requant)
 from repro.core.requant import RequantSpec
 

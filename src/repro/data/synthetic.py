@@ -11,13 +11,13 @@ shards.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, RunConfig
+from repro.configs.base import RunConfig
 
 
 def _hash_u32(x: np.ndarray) -> np.ndarray:

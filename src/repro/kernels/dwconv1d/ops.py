@@ -7,13 +7,12 @@ wrapper transposes — a layout decision, made once at the boundary.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.dwconv1d import kernel as K
-from repro.kernels.dwconv1d.ref import dwconv1d_ref
 
 
 def _default_interpret() -> bool:

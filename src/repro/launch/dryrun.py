@@ -21,7 +21,7 @@ import argparse
 import json
 import sys
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

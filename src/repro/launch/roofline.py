@@ -32,16 +32,14 @@ per-op wire-byte factors gives wire bytes per device per step.
 import argparse
 import dataclasses
 import json
-import math
 import re
-import sys
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (ARCH_IDS, RunConfig, TrainConfig,
-                                get_model_config, resolve, supported_shapes)
+from repro.configs.base import (ARCH_IDS, RunConfig, get_model_config, 
+                                resolve, supported_shapes)
 from repro.launch import dryrun as dr
 from repro.launch.mesh import make_production_mesh
 

@@ -1,58 +1,17 @@
-"""Serving launcher: batched prefill + decode over synthetic requests.
+"""Serving launcher: the open-loop bench lane over FilterServeEngine.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma3_4b --tiny \
-      --requests 8 --prompt-len 32 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --duration 20 --rate 40 \
+      --json SERVE_smoke.json
+
+Thin alias for ``repro.serving.bench`` (the Poisson arrival driver) so
+the launch/ namespace keeps one entry point per lane; every flag is
+documented there.
 """
 from __future__ import annotations
 
-import argparse
-import dataclasses
-import time
+import sys
 
-import numpy as np
-
-from repro.configs.base import SHAPES, SINGLE_POD, RunConfig, resolve
-from repro.configs.tiny import tiny_of
-from repro.serving import Request, ServeEngine
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=None)
-    args = ap.parse_args(argv)
-
-    if args.tiny:
-        mc = tiny_of(args.arch)
-        seq = args.seq or (args.prompt_len + args.max_new + 8)
-        sh = dataclasses.replace(SHAPES["decode_32k"], seq_len=seq,
-                                 global_batch=args.batch)
-        rc = RunConfig(model=mc, shape=sh, mesh=SINGLE_POD)
-    else:
-        rc = resolve(args.arch, "decode_32k")
-
-    eng = ServeEngine(rc)
-    rng = np.random.default_rng(0)
-    t0 = time.perf_counter()
-    for i in range(args.requests):
-        eng.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, rc.model.vocab_size,
-                                args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new))
-    done = eng.run()
-    dt = time.perf_counter() - t0
-    toks = sum(len(r.out_tokens) for r in done)
-    print(f"[serve] {len(done)} requests, {toks} tokens, "
-          f"{toks / dt:.1f} tok/s (CPU)")
-    for r in done[:4]:
-        print(f"  rid={r.rid} out={r.out_tokens[:8]}...")
-
+from repro.serving.bench import main
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -83,7 +83,6 @@ def main(argv=None):
 
 def _run_compressed(rc, mesh, args):
     """Pure-DP path with hierarchical int8-EF gradient reduction."""
-    import jax.numpy as jnp
     from repro.data import make_train_batch
     from repro.models import registry
     from repro.optim import adamw_init

@@ -11,7 +11,7 @@ bidirectional/cross attention (causal=False).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

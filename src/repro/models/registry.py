@@ -17,15 +17,12 @@ precomputed embeddings [B, S, D].
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
-from repro.models import attention as attn
+from repro.configs.base import ModelConfig, RunConfig
 from repro.models import module as mod
 from repro.models import transformer as tfm
 from repro.models import whisper as whisper_mod

@@ -6,7 +6,7 @@ identical (t,h,w) ids and reduce exactly to standard RoPE.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,14 +16,13 @@ Kinds: ``dense`` (attn+MLP), ``moe`` (attn+MoE), ``hymba``
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rope
@@ -32,7 +31,7 @@ from repro.models import xlstm as xlstm_mod
 from repro.models.layers import (embed_specs, embed, head_specs, lm_head,
                                  mlp, mlp_specs, rms_norm, rms_norm_specs,
                                  unembed)
-from repro.models.module import ParamSpec, p, stack_specs
+from repro.models.module import p, stack_specs
 
 
 # ---------------------------------------------------------------------------

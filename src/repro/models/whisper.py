@@ -13,8 +13,6 @@ paper's row buffer.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

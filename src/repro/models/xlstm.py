@@ -12,13 +12,12 @@ tracking); implemented as lax.scan over time with per-head state.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.module import p
-from repro.models.layers import dwconv1d, dwconv1d_specs, rms_norm, rms_norm_specs
+from repro.models.layers import dwconv1d, dwconv1d_specs
 
 NEG_INF = -1e30
 

@@ -26,14 +26,14 @@ from repro.obs import events, metrics, roofline
 # function); the module-level ``events(kind=...)`` accessor is reachable
 # as ``obs.events.events`` or via ``obs.get_trace().events(...)``.
 from repro.obs.events import (AutoSelectEvent, CompileEvent, ExecuteEvent,
-                              PlanEvent, Trace, disable, emit, enable,
-                              enabled, get_trace, tracing)
+                              PlanEvent, ServeWaveEvent, Trace, disable,
+                              emit, enable, enabled, get_trace, tracing)
 from repro.obs.metrics import REGISTRY
 from repro.obs.profiler import annotate, profile_dump
 
 __all__ = [
     "AutoSelectEvent", "CompileEvent", "ExecuteEvent", "PlanEvent",
-    "REGISTRY", "Trace", "annotate", "disable", "emit", "enable",
-    "enabled", "events", "get_trace", "metrics", "profile_dump",
+    "REGISTRY", "ServeWaveEvent", "Trace", "annotate", "disable", "emit",
+    "enable", "enabled", "events", "get_trace", "metrics", "profile_dump",
     "roofline", "tracing",
 ]

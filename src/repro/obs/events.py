@@ -41,8 +41,8 @@ from typing import ClassVar, List, Optional, Tuple
 
 __all__ = [
     "AutoSelectEvent", "CompileEvent", "ExecuteEvent", "PlanEvent",
-    "Trace", "disable", "emit", "enable", "enabled", "events",
-    "get_trace", "tracing",
+    "ServeWaveEvent", "Trace", "disable", "emit", "enable", "enabled",
+    "events", "get_trace", "tracing",
 ]
 
 DEFAULT_CAPACITY = 4096
@@ -110,6 +110,23 @@ class ExecuteEvent:
     pixels_per_s: float
     cache_hit: bool               # False = this call compiled/retraced
     cache_size: int               # the jit cache counter after the call
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeWaveEvent:
+    """One serving-engine wave: a bucket's batched dispatch, timed from
+    admission to host copy-out (``FilterServeEngine`` emits these when
+    tracing is on — the per-wave twin of the per-call ExecuteEvent)."""
+
+    kind: ClassVar[str] = "serve_wave"
+    key: str                      # bucket digest (core.pipeline.bucket_key)
+    tenant: str
+    batch: int                    # real requests in the wave
+    padded: int                   # zero planes padded to the static batch
+    cache_hit: bool               # bucket executable was warm
+    queue_depth: int              # queue length left behind at admission
+    wall_us: float                # dispatch -> copy-out wall time
+    pixels_per_s: float           # real (unpadded) pixels over wall time
 
 
 def _to_record(seq: int, t: float, event) -> dict:

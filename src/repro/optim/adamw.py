@@ -3,7 +3,6 @@ checkpoint layer and sharding rules treat it like parameters (FSDP shards
 m/v exactly as the weight they belong to — ZeRO style)."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax

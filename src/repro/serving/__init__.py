@@ -1,1 +1,16 @@
-from repro.serving.engine import ServeEngine, Request
+"""repro.serving — batched filter serving over the pipeline front door.
+
+:class:`FilterServeEngine` turns the one-frame-at-a-time
+``CompiledFilter`` API into a multi-tenant service: heterogeneous
+``(frame, spec, coeffs, gains, tenant)`` requests land in a thread-safe
+queue, are bucketed by ``(Filter2D spec, frame geometry, dtype,
+execution knobs)`` into a bounded warm LRU of compiled executables, and
+dispatch as zero-padded batches folded into the plane grid dim — one
+executable per bucket, tenant coefficient/gain swaps riding the
+zero-recompile contract. ``serving.bench`` is the open-loop Poisson
+driver that measures it (p50/p99 latency, queue depth, sustained
+pixels/s through ``obs.REGISTRY``). See ``docs/serving.md``.
+"""
+from repro.serving.engine import FilterRequest, FilterServeEngine
+
+__all__ = ["FilterRequest", "FilterServeEngine"]

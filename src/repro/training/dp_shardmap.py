@@ -17,12 +17,11 @@ a multi-device CPU mesh) the mechanism the trainer enables with
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import RunConfig

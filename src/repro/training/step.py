@@ -7,8 +7,7 @@ so the HLO stays one loop regardless of the accumulation factor.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ import time
 from typing import Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
                               restore_checkpoint)

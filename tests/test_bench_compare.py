@@ -330,3 +330,82 @@ def test_timing_carries_spread_and_noisy_flag():
     assert rec["p50_us"] == round(noisy.p50_us, 1)
     rec_q = _row_record(row("r", quiet))
     assert "noisy" not in rec_q and "p99_us" in rec_q
+
+
+# -- serving-lane rows (SERVE_smoke.json) -----------------------------------
+
+
+def _serve_row(rate=4e5, **extra):
+    r = {"name": "serve/open_loop/auto", "us_per_call": 1.5e4,
+         "pixels_per_s": rate, "p50_us": 1.5e4, "p90_us": 5e4,
+         "p99_us": 3e5, "mean_us": 4e4, "max_us": 3.2e5,
+         "queue_p50": 1.0, "queue_p99": 4.0, "requests": 800.0,
+         "waves": 700.0, "buckets": 3.0, "recompiles": 3.0,
+         "cache_hits": 697.0, "padded_planes": 1200.0,
+         "offered_rps": 40.0, "batch": 4.0, "cache_slots": 8.0}
+    r.update(extra)
+    return r
+
+
+def test_serve_metadata_keys_neither_fail_nor_reseed():
+    """Queue percentiles / mean / max / per-bucket sample counts are
+    measurement metadata like the latency-spread keys: a baseline that
+    predates them stays comparable, and wild swings in them never fail
+    the gate (open-loop latency on a shared runner is noise)."""
+    base = _payload([{"name": "serve/open_loop/auto",
+                      "us_per_call": 1.5e4, "pixels_per_s": 4e5,
+                      "offered_rps": 40.0, "batch": 4.0,
+                      "cache_slots": 8.0, "requests": 800.0,
+                      "waves": 700.0, "buckets": 3.0, "recompiles": 3.0,
+                      "cache_hits": 697.0, "padded_planes": 1200.0}])
+    cur = _payload([_serve_row(mean_us=9e5, max_us=5e6, queue_p50=40.0,
+                               queue_p99=200.0, p99_us=4e6)])
+    failures, notes = compare(base, cur)
+    assert failures == []
+    assert not any("re-seeds" in n for n in notes)
+
+
+def test_serve_throughput_hard_fails():
+    """The serving rows' pixels_per_s rides the normal hard gate: with a
+    fixed offered load it only drops when the engine stopped keeping up."""
+    failures, _ = compare(_payload([_serve_row()]),
+                          _payload([_serve_row(rate=2e5)]))
+    assert len(failures) == 1 and "pixels_per_s" in failures[0]
+
+
+def test_serve_bucket_bytes_hard_fail():
+    """Per-bucket rows carry the plan's analytic hbm_bytes_per_pixel —
+    the int8 serving bucket silently widening fails like any lane."""
+    base = _payload([_row("serve/bucket/w3i8", bpp=2.0, count=40.0,
+                          window=3.0, batch=4.0)])
+    cur = _payload([_row("serve/bucket/w3i8", bpp=8.0, count=55.0,
+                         window=3.0, batch=4.0)])
+    failures, _ = compare(base, cur)
+    assert any("hbm_bytes_per_pixel" in f for f in failures)
+
+
+def test_serve_descriptor_keys_reseed():
+    """Serving *config* keys are descriptors, not metadata: a baseline
+    that predates e.g. ``cache_slots`` measured a different serving
+    configuration, so the row re-seeds instead of gating."""
+    base = _payload([{"name": "serve/open_loop/auto",
+                      "us_per_call": 1.5e4, "pixels_per_s": 4e5}])
+    failures, notes = compare(base, _payload([_serve_row(rate=1e5)]))
+    assert failures == []
+    assert any("re-seeds" in n and "cache_slots" in n for n in notes)
+
+
+def test_cli_fully_missing_window_single_notice(tmp_path, capsys):
+    """EVERY baseline slot absent is one condition — a fresh trajectory —
+    not N skip events: exactly one seeding notice, zero per-file notes."""
+    cur = tmp_path / "SERVE_smoke.json"
+    cur.write_text(json.dumps(_payload([_serve_row()])))
+    rc = main(["--baseline", str(tmp_path / "prev1.json"),
+               "--baseline", str(tmp_path / "prev2.json"),
+               "--baseline", str(tmp_path / "prev3.json"),
+               "--current", str(cur)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert out.count("seeding") == 1
+    assert "skipped" not in out and "missing" not in out
+    assert len(out.strip().splitlines()) == 1

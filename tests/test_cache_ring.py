@@ -1,10 +1,9 @@
 """Ring KV-cache slot invariants, incl. reserved sink slots."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.models.attention import PAD_POS, init_cache, write_cache
+from repro.models.attention import init_cache, write_cache
 
 
 def _mk(k_rows):

@@ -1,13 +1,10 @@
 """Checkpoint roundtrip/atomicity/async + trainer fault-tolerance paths."""
 import dataclasses
 import os
-import tempfile
-import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
                               restore_checkpoint, save_checkpoint)

@@ -26,8 +26,7 @@ from repro import obs
 from repro.core import filters
 from repro.core.pipeline import Filter2D
 from repro.kernels.filter2d import halo
-from repro.obs.events import (AutoSelectEvent, ExecuteEvent, PlanEvent,
-                              Trace)
+from repro.obs.events import AutoSelectEvent, ExecuteEvent, Trace
 from repro.obs.metrics import Histogram, Registry, percentiles
 
 

@@ -14,6 +14,7 @@ REPRO_ALL = [
     "Filter2D",
     "RequantSpec",
     "obs",
+    "serving",
 ]
 
 CORE_ALL = [

@@ -1,0 +1,47 @@
+"""Sharding-rule resolution (pspec derivation, profile differences).
+
+The serving-engine behaviour that used to live here is covered by
+``tests/test_serving.py`` against the filter serving engine.
+"""
+from repro.sharding import rules as shd_rules
+
+
+def test_pspec_resolution_drops_and_reuse():
+    """Resolution, non-divisible drops, and the axis-reuse guard need a
+    real multi-axis mesh — run with 4 host devices in a subprocess."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding import rules as shd_rules
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        ctx = shd_rules.make_ctx(mesh, "train")
+        assert ctx.pspec((64, 32), ("vocab", "embed")) == P("model", "data")
+        # non-divisible dim drops its mapping
+        assert ctx.pspec((63, 32), ("vocab", "embed")) == P(None, "data")
+        assert ctx.dropped, "drop must be recorded"
+        # a mesh axis may appear only once per spec (trailing None trimmed)
+        assert ctx.pspec((4, 4), ("vocab", "mlp")) == P("model")
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_profile_differences():
+    train = shd_rules.make_rules("train")
+    dec = shd_rules.make_rules("decode")
+    assert train["act_heads"] == "model"
+    assert dec["act_heads"] is None
+    assert dec["cache_seq"] == "model"
+    z = shd_rules.make_rules("zero1")
+    assert z["embed"] is None and train["embed"] == "data"
+    cp = shd_rules.make_rules("kv_seq")
+    assert cp["act_kv_seq"] == "model" and cp["act_heads"] is None

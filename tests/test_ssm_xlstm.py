@@ -1,7 +1,6 @@
 """Recurrence equivalences: SSD chunked == naive sequential == step;
 mLSTM chunkwise == parallel == step replay; sLSTM state continuation."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
