@@ -94,7 +94,7 @@ def main():
     px = sep_frames = 0
     prev_mean = None
     served = []
-    for i in range(args.frames):
+    for _ in range(args.frames):
         frame = jnp.asarray(next(stream)[..., 0])
         # one pass applies the whole bank (the coefficient file)
         feats = bank_pipe(frame, cf.as_bank()[:4])

@@ -1,0 +1,35 @@
+"""Static kernel verifier: jaxpr-level DMA-race, pairing and contract
+checks for the Pallas filter stack.
+
+The double-buffered halo engine reproduces a hand-scheduled FPGA datapath
+in software — overlapped window DMA, banked scratch, storage-width words —
+and its invariants (every started copy waited exactly once, no bank reused
+while a DMA is in flight, read-once from HBM, narrow words end to end,
+scratch within the VMEM budget) lived only in docstrings until this
+subsystem. ``verify`` traces a :class:`~repro.core.pipeline.CompiledFilter`
+(or a raw kernel call) to a jaxpr, lowers the pallas_call bodies into a
+small dataflow IR (:mod:`repro.analysis.ir`) and runs the pass pipeline
+(:mod:`repro.analysis.passes`) over it, producing a typed
+:class:`~repro.analysis.report.Report` that shares the ``repro.obs``
+event/JSONL conventions.
+
+    from repro import analysis
+    report = analysis.verify(cf)          # cf: a CompiledFilter
+    assert report.clean, report.render()
+
+``python -m repro.analysis --sweep`` runs the executor × dtype × border ×
+overlap × grid-order matrix (the CI ``kernel-verify`` gate); see
+``docs/analysis.md`` for the pass catalogue and the IR sketch.
+"""
+from repro.analysis.ir import (KernelIR, iter_eqns, lower_pallas_call,
+                               pallas_calls)
+from repro.analysis.passes import PASSES, run_passes
+from repro.analysis.report import Finding, Report, load_report
+from repro.analysis.verify import (sweep, sweep_configs, verify,
+                                   verify_kernel)
+
+__all__ = [
+    "Finding", "KernelIR", "PASSES", "Report", "iter_eqns", "load_report",
+    "lower_pallas_call", "pallas_calls", "run_passes", "sweep",
+    "sweep_configs", "verify", "verify_kernel",
+]

@@ -244,6 +244,7 @@ class CompiledFilter:
         self.overlap = bool(overlap)
         self.profile_dump = profile_dump
         self._profiled = False
+        self._verify_report = None     # cached by verify()
         self.vmem_budget = (DEFAULT_VMEM_BUDGET if vmem_budget is None
                             else int(vmem_budget))
         self.interpret = (ops._default_interpret() if interpret is None
@@ -677,7 +678,21 @@ class CompiledFilter:
         return K.plan_banks(self.plan, num_filters=self.spec.num_filters,
                             overlap=self.overlap)
 
-    def explain(self, as_dict: bool = False):
+    def verify(self, grid_orders=None):
+        """Run the static kernel verifier over this compiled pipeline.
+
+        Traces the jitted executable, lowers any pallas_call to the
+        analysis IR and runs the full pass pipeline (DMA pairing, bank
+        hazards, read-once, width lint, VMEM budget — the Pallas
+        executors are checked under BOTH grid orders). Returns the
+        :class:`~repro.analysis.report.Report`; the result is cached and
+        surfaces in :meth:`explain`. See ``docs/analysis.md``.
+        """
+        from repro import analysis      # deferred: analysis sits above us
+        self._verify_report = analysis.verify(self, grid_orders=grid_orders)
+        return self._verify_report
+
+    def explain(self, as_dict: bool = False, verify: bool = False):
         """The plan report: what compiled, why, and what it should cost.
 
         Every byte figure here IS the existing static accounting —
@@ -686,7 +701,11 @@ class CompiledFilter:
         exact agreement in ``tests/test_obs.py``), plus the two-ceiling
         roofline prediction from :mod:`repro.obs.roofline`. ``as_dict=True``
         returns the machine-readable twin the bench harness consumes.
+        ``verify=True`` runs :meth:`verify` first (if not already cached)
+        so the report carries the static checker's verdict.
         """
+        if verify and self._verify_report is None:
+            self.verify()
         spec, plan = self.spec, self.plan
         eb, ob = self._plan_banks()
         ws = self.vmem_working_set()
@@ -731,6 +750,15 @@ class CompiledFilter:
                 "read_amplification": halo.read_amplification(plan),
             },
             "roofline": roof,
+            "verify": None if self._verify_report is None else {
+                "clean": self._verify_report.clean,
+                "findings": [
+                    {"passname": f.passname, "message": f.message,
+                     "ref": f.ref, "count": f.count}
+                    for f in self._verify_report.findings],
+                "error": self._verify_report.error,
+                "passes": list(self._verify_report.passes),
+            },
         }
         if as_dict:
             return d
@@ -782,6 +810,19 @@ class CompiledFilter:
             f"({r['bound']}-bound; {r['flops_per_pixel']:.0f} flop/px, "
             + (f"{r['bytes_per_pixel']:.3f} B/px)" if r["bytes_per_pixel"]
                is not None else "bytes unknown)"))
+        vr = d.get("verify")
+        if vr is not None:
+            if vr["error"] is not None:
+                lines.append(f"  verify    TRACE ERROR — {vr['error']}")
+            elif vr["clean"]:
+                lines.append(f"  verify    clean "
+                             f"({len(vr['passes'])} passes)")
+            else:
+                lines.append(f"  verify    {len(vr['findings'])} "
+                             "finding(s):")
+                for f in vr["findings"]:
+                    n = f" x{f['count']}" if f["count"] > 1 else ""
+                    lines.append(f"    [{f['passname']}]{n} {f['message']}")
         return "\n".join(lines)
 
     def _explain_line(self) -> str:

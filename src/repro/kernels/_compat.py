@@ -7,4 +7,4 @@ module shares one shim.
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) \
-    or getattr(pltpu, "TPUCompilerParams")
+    or pltpu.TPUCompilerParams

@@ -64,6 +64,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.filter2d import apply_requant, is_fixed_point
 from repro.kernels._compat import CompilerParams
 from repro.kernels.filter2d import halo
+from repro.kernels.filter2d.contract import KernelContract
 from repro.kernels.filter2d.halo import HaloPlan
 
 LANE = halo.LANE  # TPU lane width: last-dim alignment target
@@ -171,6 +172,36 @@ def plan_banks(plan: HaloPlan, num_filters: int = 1,
     ext_banks = 2 if plan.rows.n > 1 else 1
     out_banks = 2 if plan.rows.n * num_filters > 1 else 1
     return ext_banks, out_banks
+
+
+def kernel_contract(plan: HaloPlan, num_filters: int = 1,
+                    overlap: bool = True,
+                    grid_order: str = "filters_innermost",
+                    form: str = "direct") -> KernelContract:
+    """The declared dataflow contract of the ``filter2d_halo`` trace these
+    knobs produce — operand/scratch/grid roles for the static verifier
+    (``repro.analysis``). Built from the same inputs that shape the
+    kernel, next to the kernel, so the two cannot drift silently: a
+    kernel restructure that breaks the contract surfaces as a verifier
+    finding, not a misread jaxpr."""
+    if grid_order not in GRID_ORDERS:
+        raise ValueError(f"unknown grid_order {grid_order!r}; choose from "
+                         f"{GRID_ORDERS}")
+    ext_banks, out_banks = plan_banks(plan, num_filters, overlap)
+    operands = ["frame", "coeffs"]
+    if plan.requant is not None:
+        operands.append("qparams")
+    scratch = (("ext", "obuf", "fill_sem", "store_sem") if overlap
+               else ("ext", "fill_sem"))
+    inner = (("strip", "filter") if grid_order == "filters_innermost"
+             else ("filter", "strip"))
+    return KernelContract(operands=tuple(operands), outputs=("out",),
+                          scratch=scratch,
+                          axes=("plane", "tile") + inner,
+                          grid_order=grid_order, overlap=overlap,
+                          num_filters=num_filters, form=form,
+                          ext_banks=ext_banks, out_banks=out_banks,
+                          has_requant=plan.requant is not None)
 
 
 def _when(*conds):

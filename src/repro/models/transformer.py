@@ -72,10 +72,9 @@ def layer_window(cfg: ModelConfig, l: int) -> int:
         return 0
     if cfg.global_every and (l % cfg.global_every == cfg.global_every - 1):
         return 0                                  # periodic global layer
-    if cfg.family == "hybrid":
-        # hymba: global attention at first / middle / last layer
-        if l in (0, cfg.num_layers // 2, cfg.num_layers - 1):
-            return 0
+    if cfg.family == "hybrid" and l in (0, cfg.num_layers // 2,
+                                        cfg.num_layers - 1):
+        return 0                      # hymba: global at first/middle/last
     return cfg.attn_window
 
 

@@ -1,0 +1,27 @@
+"""Seeded-bug kernel fixtures for the static verifier.
+
+Each fixture is the shipped double-buffered halo kernel with EXACTLY ONE
+invariant deliberately broken — the regression corpus that pins each
+verifier pass to the bug class it exists for:
+
+``stale_guard``      the refill guard hard-codes ``f == 0`` under a
+                     ``strips_innermost`` grid (the PR 6 bug class): every
+                     post-first-filter step reads whatever strip the bank
+                     last held            -> ``bank_hazard`` (stale-scratch)
+``unpaired_start``   one extra output-store DMA is started at the final
+                     grid step and never waited                         ->
+                     ``dma_pairing`` (unwaited-start)
+``premature_reuse``  the output bank is rewritten BEFORE the pre-wait for
+                     the store still flying out of it  -> ``bank_hazard``
+                     (war-obuf)
+``widen_mac``        the int8 stream is widened to float32 at the MAC
+                     input instead of the int32 accumulator ->
+                     ``width_lint``
+
+``build(name)`` returns ``(plan, verify_kwargs)`` ready for
+``analysis.verify_kernel(plan, **verify_kwargs)``; ``FIXTURES[name]``
+carries the pass each one must be flagged by (and no other).
+"""
+from analysis_fixtures.kernels import FIXTURES, build  # noqa: F401
+
+__all__ = ["FIXTURES", "build"]

@@ -1,0 +1,180 @@
+"""The static kernel verifier: clean verdicts across every executor,
+seeded-bug fixtures flagged by exactly their intended pass, Report JSONL
+round-trip, and the ``python -m repro.analysis`` CLI exit-code contract
+(0 clean / 1 findings / 2 trace error)."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import pytest
+
+from repro import analysis
+from repro.analysis import __main__ as analysis_cli
+from repro.analysis.report import Finding, Report, load_report
+from repro.core.pipeline import Filter2D
+from repro.kernels.filter2d import halo
+from repro.kernels.filter2d.kernel import GRID_ORDERS
+
+from analysis_fixtures import FIXTURES, build
+
+
+# -- verify() across the executor matrix ------------------------------------
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+@pytest.mark.parametrize("execution", ["core", "xla", "pallas",
+                                       "streaming", "sharded"])
+def test_verify_clean_every_executor(execution, overlap):
+    mesh = None
+    if execution == "sharded":
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    cf = Filter2D(window=5, border="mirror").compile(
+        (24, 300), execution, mesh=mesh, strip_h=8, tile_w=128,
+        overlap=overlap)
+    report = cf.verify()
+    assert report.clean, report.render()
+    if execution == "pallas":
+        # both grid orders analyzed, full pass pipeline ran
+        assert set(report.passes) == set(analysis.PASSES)
+        assert report.stat("read_amplification_traced") is not None
+    else:
+        # non-Pallas executors: the trace itself is the check — it must
+        # succeed and contain zero hand-scheduled pallas_call kernels
+        assert report.stat("pallas_calls") == 0.0
+
+
+def test_verify_kernel_both_grid_orders_clean():
+    plan = halo.make_plan(24, 300, 5, halo.BorderSpec("wrap"), 8, 128,
+                          "int8")
+    for go in GRID_ORDERS:
+        r = analysis.verify_kernel(plan, num_filters=2, dtype="int8",
+                                   grid_order=go)
+        assert r.clean, r.render()
+        # the read-once bound follows the grid order: strips_innermost
+        # refills per filter by contract
+        bound = r.stat("read_amplification_bound")
+        base = halo.read_amplification(plan)
+        want = base * (2 if go == "strips_innermost" else 1)
+        assert bound == pytest.approx(want)
+
+
+def test_verify_surfaces_in_explain():
+    cf = Filter2D(window=3, border="mirror").compile(
+        (24, 300), "pallas", strip_h=8, tile_w=128)
+    text = cf.explain(verify=True)
+    assert "verify" in text and "clean" in text
+    d = cf.explain(as_dict=True)
+    assert d["verify"]["clean"] is True
+    assert set(d["verify"]["passes"]) == set(analysis.PASSES)
+
+
+# -- seeded-bug fixtures: each flagged by exactly its pass -------------------
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_fixture_flagged_by_intended_pass_only(name):
+    cfg = FIXTURES[name]
+    plan, kw = build(name)
+    report = analysis.verify_kernel(plan, **kw)
+    assert report.error is None, report.error
+    assert report.findings, f"fixture {name} verified clean"
+    flagged = {f.passname for f in report.findings}
+    assert flagged == {cfg["expect_pass"]}, report.render()
+    assert any(cfg["expect_msg"] in f.message for f in report.findings), \
+        report.render()
+
+
+# -- Report JSONL round-trip -------------------------------------------------
+
+
+def test_report_jsonl_round_trip(tmp_path):
+    plan, kw = build("stale_guard")
+    report = analysis.verify_kernel(plan, **kw)
+    assert report.findings
+    path = str(tmp_path / "report.jsonl")
+    report.to_jsonl(path)
+    # obs conventions: every line is a seq/t/kind-framed record
+    with open(path) as fh:
+        recs = [json.loads(line) for line in fh]
+    assert recs[0]["kind"] == "verify_report"
+    assert all(r["kind"] == "finding" for r in recs[1:])
+    assert all("seq" in r and "t" in r for r in recs)
+    assert load_report(path) == report
+
+
+def test_clean_report_round_trip(tmp_path):
+    report = Report(key="k", passes=("a", "b"), stats=(("x", 1.5),))
+    path = str(tmp_path / "clean.jsonl")
+    report.to_jsonl(path)
+    assert load_report(path) == report
+
+
+def test_report_merge():
+    f = Finding(passname="p", message="m", key="k2")
+    merged = Report(key="k1", passes=("a",)).merge(
+        Report(key="k2", passes=("a", "b"), findings=(f,), error="boom"))
+    assert merged.key == "k1"
+    assert merged.passes == ("a", "b")
+    assert merged.findings == (f,)
+    assert merged.error == "boom"
+    assert not merged.clean
+
+
+# -- CLI exit-code contract --------------------------------------------------
+
+
+def test_cli_exit_0_clean_subprocess(tmp_path):
+    out = str(tmp_path / "sweep.jsonl")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--executor", "core",
+         "--executor", "xla", "--dtype", "float32", "--border", "mirror",
+         "--jsonl", out, "-q"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "trace error" in proc.stdout
+    with open(out) as fh:
+        recs = [json.loads(line) for line in fh]
+    assert recs and all(r["kind"] == "verify_report" for r in recs)
+
+
+def test_cli_exit_1_on_findings(monkeypatch, capsys):
+    bad = Report(key="k", passes=("bank_hazard",), findings=(
+        Finding(passname="bank_hazard", message="seeded", key="k"),))
+    monkeypatch.setattr(analysis_cli, "sweep",
+                        lambda progress=None, **kw: {"k": bad})
+    assert analysis_cli.main(["--sweep"]) == 1
+    assert "1 finding(s)" in capsys.readouterr().out
+
+
+def test_cli_exit_2_on_trace_error(monkeypatch, capsys):
+    # a trace error outranks findings: the verifier itself failed
+    bad = Report(key="a", findings=(
+        Finding(passname="dma_pairing", message="x", key="a"),))
+    err = Report(key="b", error="ValueError: no plan")
+    monkeypatch.setattr(analysis_cli, "sweep",
+                        lambda progress=None, **kw: {"a": bad, "b": err})
+    assert analysis_cli.main(["--sweep"]) == 2
+    assert "1 trace error(s)" in capsys.readouterr().out
+
+
+def test_cli_list_passes(capsys):
+    assert analysis_cli.main(["--list-passes"]) == 0
+    out = capsys.readouterr().out
+    for name in analysis.PASSES:
+        assert name in out
+
+
+def test_trace_error_report_not_raise():
+    # a plan the halo engine rejects (frame smaller than the window's
+    # halo) must come back as an error Report, never an exception
+    class Broken:
+        pass
+
+    plan = halo.make_plan(24, 300, 5, halo.BorderSpec("mirror"), 8, 128,
+                          "float32")
+    r = analysis.verify_kernel(plan, kernel_fn=lambda *a: Broken.nope,
+                               key="broken")
+    assert r.error is not None and "AttributeError" in r.error
+    assert not r.clean

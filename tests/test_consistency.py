@@ -81,7 +81,7 @@ def test_multi_token_greedy_decode(rng):
     last, caches = b.prefill(params, {"inputs": prompt})
     toks = [jnp.argmax(last, -1)]
     cur = 8
-    for i in range(6):
+    for _ in range(6):
         logits, caches = b.decode_step(
             params, toks[-1][:, None], caches, jnp.asarray(cur, jnp.int32))
         toks.append(jnp.argmax(logits, -1))

@@ -12,7 +12,7 @@ def _run(code: str, devices: int, timeout: int = 420) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC
-    for attempt in range(3):
+    for _attempt in range(3):
         r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                            capture_output=True, text=True, timeout=timeout,
                            env=env)

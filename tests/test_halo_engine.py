@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import analysis
 from repro.core import filters
 from repro.core.border_spec import BorderSpec, np_pad_mode
 from repro.core.filter2d import filter_bank
@@ -102,22 +103,16 @@ def test_stream_is_read_once_no_prematerialized_layout():
             regime="stream", strip_h=64, tile_w=128, interpret=True)
         jaxpr = jax.make_jaxpr(fn)(planes, coeffs)
 
-        sizes, kernel_in = [], []
-
-        def walk(jx):
-            for eqn in jx.eqns:
-                if eqn.primitive.name == "pallas_call":
-                    kernel_in.extend(int(np.prod(v.aval.shape))
-                                     for v in eqn.invars)
-                    continue              # ref-level ops inside are blocks
-                sizes.extend(int(np.prod(v.aval.shape)) for v in eqn.outvars
-                             if v.aval.shape)
-                for key in ("jaxpr", "call_jaxpr"):
-                    sub = eqn.params.get(key)
-                    if sub is not None:
-                        walk(getattr(sub, "jaxpr", sub))
-
-        walk(jaxpr.jaxpr)
+        # the shared analysis walker replaces the old hand-rolled
+        # recursion (ref-level ops inside the kernel are block-shaped,
+        # so pallas bodies stay excluded — iter_eqns' default)
+        calls = analysis.pallas_calls(jaxpr)
+        kernel_in = [int(np.prod(v.aval.shape))
+                     for call in calls for v in call.invars]
+        sizes = [int(np.prod(v.aval.shape))
+                 for eqn in analysis.iter_eqns(jaxpr)
+                 if eqn.primitive.name != "pallas_call"
+                 for v in eqn.outvars if v.aval.shape]
         assert kernel_in, "no pallas_call in the traced graph"
         # the kernel reads the raw planes (1x) + the w² coefficients
         assert max(kernel_in) == frame_elems, (pol, kernel_in)

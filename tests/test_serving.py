@@ -98,7 +98,7 @@ def test_bucketing_mixed_geometries():
     fx = FakeExecutor()
     with FilterServeEngine(batch_size=4, compile_fn=fx.compile_fn) as eng:
         reqs = []
-        for i in range(4):
+        for _ in range(4):
             reqs.append(eng.submit(frame(8, 8), K1, spec=SPEC3))
             reqs.append(eng.submit(frame(6, 10), K1, spec=SPEC3))
             reqs.append(eng.submit(frame(8, 8), K1, spec=SPEC5))
